@@ -1,0 +1,96 @@
+"""§Perf hillclimb driver: re-lower single cells with candidate changes and
+report the roofline-term deltas.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --which 1
+"""
+import argparse
+import json
+import os
+import sys
+
+# must precede jax import
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import jax  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+from repro import configs  # noqa: E402
+from repro.analysis.hlo import analyze_hlo  # noqa: E402
+from repro.analysis.roofline import roofline  # noqa: E402
+from repro.launch.dryrun import build_cell  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def measure(arch, shape_name, overrides=None, fsdp=True, sync="gspmd",
+            multi_pod=False):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    step_fn, shapes, shards = build_cell(arch, shape_name, mesh,
+                                         sync_mode=sync, fsdp=fsdp,
+                                         cfg_overrides=overrides)
+    with jax.set_mesh(mesh):
+        c = jax.jit(step_fn, in_shardings=shards).lower(*shapes).compile()
+    st = analyze_hlo(c.as_text())
+    mem = c.memory_analysis()
+    cfg = configs.get(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    t = roofline(cfg, cfg.shape(shape_name),
+                 "2x16x16" if multi_pod else "16x16",
+                 512 if multi_pod else 256,
+                 st.dot_flops, st.bytes_touched, st.total_collective_bytes)
+    return {
+        "compute_s": t.compute_s, "memory_s": t.memory_s,
+        "collective_s": t.collective_s, "dominant": t.dominant,
+        "roofline_fraction": t.roofline_fraction,
+        "useful_ratio": t.useful_flop_ratio,
+        "temp_gb": mem.temp_size_in_bytes / 1e9,
+        "collective_counts": st.collective_counts,
+    }
+
+
+def hc1():
+    """smollm-135m prefill_32k (worst non-decode roofline fraction):
+    memory-bound; hypothesis: kv re-streaming scales 1/q_block."""
+    out = {"baseline_qb1024": measure("smollm-135m", "prefill_32k")}
+    for qb in (2048, 4096):
+        out[f"qb{qb}"] = measure("smollm-135m", "prefill_32k",
+                                 {"q_block": qb, "kv_block": qb})
+    return out
+
+
+def hc2():
+    """recurrentgemma-2b decode_32k (most collective-bound cell):
+    hypothesis: the collectives are FSDP param all-gathers per decode step;
+    serving should keep weights TP-resident (fsdp=False)."""
+    return {
+        "baseline_fsdp": measure("recurrentgemma-2b", "decode_32k", fsdp=True),
+        "no_fsdp": measure("recurrentgemma-2b", "decode_32k", fsdp=False),
+    }
+
+
+def hc2b():
+    """olmoe train_4k EP combine: seq-shard the MoE output so the model-axis
+    partial-sum all-reduce becomes a reduce-scatter."""
+    return {
+        "baseline": measure("olmoe-1b-7b", "train_4k"),
+        "seq_shard_out": measure("olmoe-1b-7b", "train_4k",
+                                 {"moe_seq_shard_out": True}),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--which", required=True, choices=["1", "2", "2b"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    fn = {"1": hc1, "2": hc2, "2b": hc2b}[args.which]
+    res = fn()
+    print(json.dumps(res, indent=1))
+    if args.out:
+        json.dump(res, open(args.out, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Roofline table (§Roofline) from the dry-run JSON artifacts.
+
+Reads dryrun_single_pod.json (produced by ``python -m repro.launch.dryrun
+--all --out ...``) and emits the three roofline terms per (arch x shape),
+the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and the roofline fraction.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro import configs
+from repro.analysis.roofline import roofline
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SINGLE = os.path.join(REPO, "dryrun_single_pod.json")
+
+
+def load_rows(path: str = SINGLE):
+    if not os.path.exists(path):
+        raise FileNotFoundError(path)
+    with open(path) as f:
+        return json.load(f)
+
+
+def terms_for(rec: dict):
+    cfg = configs.get(rec["arch"])
+    shape = cfg.shape(rec["shape"])
+    n_dev = 512 if rec["mesh"] == "2x16x16" else 256
+    la = rec.get("loop_aware", {})
+    flops = la.get("dot_flops") or rec.get("flops", 0.0)
+    byts = la.get("bytes_touched") or rec.get("bytes_accessed", 0.0)
+    coll = la.get("total_collective_bytes") or \
+        rec.get("collectives", {}).get("total_bytes", 0.0)
+    return roofline(cfg, shape, rec["mesh"], n_dev, flops, byts, coll)
+
+
+def summary_rows(path: str = SINGLE):
+    out = []
+    for rec in load_rows(path):
+        if rec.get("skipped") or "error" in rec:
+            continue
+        t = terms_for(rec)
+        out.append(
+            f"roofline/{t.arch}/{t.shape},{t.bound_s * 1e6:.1f},"
+            f"compute={t.compute_s:.2e};memory={t.memory_s:.2e};"
+            f"collective={t.collective_s:.2e};dominant={t.dominant};"
+            f"useful={t.useful_flop_ratio:.2f};"
+            f"frac={t.roofline_fraction:.3f}")
+    return out
+
+
+def markdown_table(path: str = SINGLE):
+    lines = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+             "dominant | MODEL/HLO flops | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for rec in load_rows(path):
+        if rec.get("skipped"):
+            lines.append(f"| {rec['arch']} | {rec['shape']} | -- | -- | -- | "
+                         f"skipped | -- | -- |")
+            continue
+        if "error" in rec:
+            lines.append(f"| {rec['arch']} | {rec['shape']} | ERROR "
+                         f"| | | | | |")
+            continue
+        t = terms_for(rec)
+        lines.append(
+            f"| {t.arch} | {t.shape} | {t.compute_s:.2e} | {t.memory_s:.2e} "
+            f"| {t.collective_s:.2e} | {t.dominant} "
+            f"| {t.useful_flop_ratio:.2f} | {t.roofline_fraction:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

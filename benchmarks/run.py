@@ -1,0 +1,42 @@
+"""Benchmark harness: one function per paper table + allreduce bandwidth +
+roofline summary (from dry-run artifacts when present).
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
+
+from benchmarks.table_benchmarks import ALL  # noqa: E402
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in ALL:
+        try:
+            for name, sec, derived in fn():
+                print(f"{name},{sec * 1e6:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{fn.__name__},ERROR,{e!r}")
+    # roofline summary if the dry-run artifacts exist
+    try:
+        from benchmarks.roofline_report import summary_rows
+        for row in summary_rows():
+            print(row)
+    except FileNotFoundError:
+        print("roofline,skipped,run `python -m repro.launch.dryrun --all "
+              "--out dryrun_single_pod.json` first")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""One benchmark per paper table.
+
+Table 1 (Cartesian EDST counts, from [16], validated by our constructions on
+Cartesian instances), Table 2 (star-product EDST counts per condition row),
+Table 3 (network EDSTs: constructed vs combinatorial bound), Table 4 (factor
+graph t/r), plus the Allreduce bandwidth model (Sec 1.1 motivation).
+
+Each function returns (name, seconds_per_call, derived) rows.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import factor_graphs as fg
+from repro.core import topologies as topo
+from repro.core.collectives import CostModel, allreduce_schedule
+from repro.core.edst_star import (maximal_edsts, one_sided_edsts,
+                                  property_461_edsts, star_edsts,
+                                  universal_edsts)
+from repro.core.factor_edsts import edsts_for
+from repro.core.star import cartesian, random_star
+from repro.core.topologies import edst_set_for
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def table1_cartesian():
+    """Cartesian-product rows of Table 1 ([16]'s counts, via our general
+    star machinery with identity bijections)."""
+    rows = []
+    cases = [
+        ("K5xK5 r=t both", lambda: cartesian(fg.complete(5), fg.complete(5)),
+         "t1+t2", lambda t1, t2: t1 + t2),
+        ("K4xK4 r=0 both", lambda: cartesian(fg.complete(4), fg.complete(4)),
+         "t1+t2-1", lambda t1, t2: t1 + t2 - 1),
+        ("C8xC8 torus", lambda: cartesian(fg.cycle(8), fg.cycle(8)),
+         "t1+t2", lambda t1, t2: t1 + t2),
+        ("K6xC6", lambda: cartesian(fg.complete(6), fg.cycle(6)),
+         "t1+t2-1", lambda t1, t2: t1 + t2 - 1),
+    ]
+    for name, mk, rule, expect in cases:
+        sp = mk()
+        es, en = edsts_for(sp.gs), edsts_for(sp.gn)
+        res, dt = _timed(lambda: star_edsts(sp, es, en))
+        rows.append((f"table1/{name}", dt,
+                     f"trees={res.count} rule={rule} "
+                     f"expected={expect(es.t, en.t)} max={res.maximal}"))
+        assert res.count >= expect(es.t, en.t), name
+    return rows
+
+
+def table2_star_conditions():
+    """Each row of Table 2 on a star product meeting its conditions."""
+    rows = []
+    # r1=t1 AND r2=t2 -> t1+t2 (maximal)
+    sp = random_star(fg.complete(5), fg.cycle(5), seed=11)
+    es, en = edsts_for(sp.gs), edsts_for(sp.gn)
+    res, dt = _timed(lambda: maximal_edsts(sp, es, en))
+    rows.append(("table2/r=t_both_4.5.2", dt,
+                 f"trees={res.count} expect={es.t+en.t} max={res.maximal}"))
+    # r1>=t1 OR r2>=t2 -> t1+t2-1
+    sp = topo.polarstar(3, "qr", 5)
+    es, en = edsts_for(sp.gs), edsts_for(sp.gn)
+    res, dt = _timed(lambda: one_sided_edsts(sp, es, en))
+    rows.append(("table2/one_sided_4.5.9", dt,
+                 f"trees={res.count} expect={es.t+en.t-1} max={res.maximal}"))
+    # Property 4.6.1 (Cartesian) -> t1+t2-1 when r<t both
+    sp = cartesian(fg.complete(4), fg.complete(4))
+    es, en = edsts_for(sp.gs), edsts_for(sp.gn)
+    res, dt = _timed(lambda: property_461_edsts(sp, es, en))
+    rows.append(("table2/property461_4.6.2", dt,
+                 f"trees={res.count} expect={es.t+en.t-1} max={res.maximal}"))
+    # universal, any star product -> t1+t2-2
+    sp = random_star(fg.complete(6), fg.complete(6), seed=3)
+    es, en = edsts_for(sp.gs), edsts_for(sp.gn)
+    res, dt = _timed(lambda: universal_edsts(sp, es, en))
+    rows.append(("table2/universal_4.3.1", dt,
+                 f"trees={res.count} expect={es.t+en.t-2}"))
+    return rows
+
+
+def table3_networks():
+    """Constructed EDSTs vs the upper bound for each Table-3 network family
+    instantiable at test scale."""
+    rows = []
+    cases = [
+        ("slimfly_q5_4k+1", lambda: topo.slimfly(5), 3),
+        ("slimfly_q4_4k", lambda: topo.slimfly(4), 3),
+        ("slimfly_q7_4k-1", lambda: topo.slimfly(7), 5),
+        ("slimfly_q8_4k", lambda: topo.slimfly(8), 6),
+        ("slimfly_q9_4k+1", lambda: topo.slimfly(9), 6),
+        ("bundlefly_q4_a5", lambda: topo.bundlefly(4, 5), 4),
+        ("bundlefly_q5_a5", lambda: topo.bundlefly(5, 5), 4),
+        ("polarstar_er2_qr5", lambda: topo.polarstar(2, "qr", 5), 2),
+        ("polarstar_er3_qr5", lambda: topo.polarstar(3, "qr", 5), 2),
+        ("polarstar_er4_qr5", lambda: topo.polarstar(4, "qr", 5), 3),
+        ("polarstar_er2_iq4", lambda: topo.polarstar(2, "iq", 4), 3),
+        ("polarstar_er3_iq4", lambda: topo.polarstar(3, "iq", 4), 3),
+        # q odd, d=4m+3: paper Table 3 row "Maybe": floor((q+d)/2) - 1
+        ("polarstar_er3_iq7", lambda: topo.polarstar(3, "iq", 7), 4),
+        ("hyperx_4x4", lambda: topo.hyperx([4, 4]), 3),
+        ("torus_16x16", lambda: topo.device_topology((16, 16)), 2),
+    ]
+    for name, mk, expected in cases:
+        sp = mk()
+        if name.startswith("bundlefly"):
+            es = edst_set_for(topo.slimfly(int(name.split("_q")[1][0])))
+            res, dt = _timed(lambda: star_edsts(sp, Es=es))
+        else:
+            res, dt = _timed(lambda: star_edsts(sp))
+        g = sp.product()
+        ub = g.m // (g.n - 1)
+        rows.append((f"table3/{name}", dt,
+                     f"V={g.n} trees={res.count} expected={expected} "
+                     f"bound={ub} thm={res.theorem} max={res.maximal}"))
+        assert res.count == expected, (name, res.count, expected)
+    return rows
+
+
+def table4_factor_graphs():
+    """Factor-graph (t, r) for every family in Table 4."""
+    rows = []
+    cases = [
+        ("C(5)=QR(5)", lambda: fg.paley(5), (1, 1)),
+        ("C(13)=QR(13)", lambda: fg.paley(13), (3, 3)),
+        ("C(4)", lambda: fg.mms_supernode(4), (1, 1)),
+        ("C(7)", lambda: fg.mms_supernode(7), (2, 2)),
+        ("K_{5,5}", lambda: fg.complete_bipartite(5), (2, 7)),
+        ("K_{4,4}", lambda: fg.complete_bipartite(4), (2, 2)),
+        ("K6", lambda: fg.complete(6), (3, 0)),
+        ("K7", lambda: fg.complete(7), (3, 3)),
+        ("BDF(4)", lambda: fg.bdf(4), (2, 2)),
+        ("BDF(5)", lambda: fg.bdf(5), (2, 7)),
+        ("IQ(4)", lambda: fg.inductive_quad(4), (2, 2)),
+        ("IQ(7)", lambda: fg.inductive_quad(7), (3, 11)),
+        ("ER_3", lambda: fg.erdos_renyi_polarity(3), (2, 0)),
+        ("ER_4", lambda: fg.erdos_renyi_polarity(4), (2, 10)),
+    ]
+    for name, mk, (t, r) in cases:
+        g = mk()
+        E, dt = _timed(lambda: edsts_for(g))
+        rows.append((f"table4/{name}", dt, f"t={E.t} r={E.r} "
+                     f"expected=({t},{r}) ok={(E.t, E.r) == (t, r)}"))
+        assert (E.t, E.r) == (t, r), name
+    return rows
+
+
+def allreduce_bandwidth():
+    """Sec 1.1 motivation: k-tree EDST allreduce vs ring vs single tree."""
+    rows = []
+    cm = CostModel()
+    for dims, label in [((16, 16), "pod_16x16"), ((2, 16, 16), "2pod"),
+                        ((8, 8), "torus8x8")]:
+        sp = topo.device_topology(dims)
+        res = star_edsts(sp)
+        sched, dt = _timed(lambda: allreduce_schedule(sp.n, res.trees))
+        b = 100 * 2 ** 20
+        ring = cm.ring_allreduce(b, sp.n)
+        ktree = cm.edst_tree_allreduce(b, sched)
+        innet = cm.edst_tree_allreduce(b, sched, in_network=True)
+        one = cm.single_tree_allreduce(b, sched.trees[0])
+        rows.append((f"allreduce/{label}", dt,
+                     f"k={sched.k} ring_ms={ring*1e3:.2f} "
+                     f"ktree_ms={ktree*1e3:.2f} innet_ms={innet*1e3:.2f} "
+                     f"1tree_ms={one*1e3:.2f} "
+                     f"speedup_vs_ring={ring/ktree:.2f}x "
+                     f"speedup_vs_1tree={one/ktree:.2f}x"))
+    return rows
+
+
+ALL = [table1_cartesian, table2_star_conditions, table3_networks,
+       table4_factor_graphs, allreduce_bandwidth]

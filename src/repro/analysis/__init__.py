@@ -1,0 +1,2 @@
+from .hlo import HloStats, analyze_hlo
+from .roofline import RooflineTerms, roofline

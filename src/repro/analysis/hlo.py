@@ -1,0 +1,291 @@
+"""Loop-aware static analysis of optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE -- with
+scan-over-layers models that under-reports FLOPs/bytes/collectives by the
+layer count.  This module parses the HLO text into computations, extracts
+while-loop trip counts from their condition computations, and aggregates
+
+  * dot FLOPs (2 * prod(output dims) * prod(contraction dims)),
+  * per-op bytes touched (operand + output shape bytes),
+  * collective bytes by op kind,
+
+from the entry computation downward, multiplying by trip counts.  This is
+the "profile" the §Perf loop iterates on (no real-TPU timings exist here).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+                "u64": 8, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_CALL_RE = re.compile(
+    r"(?:to_apply|calls|body|condition|branch_computations)=\{?%?([\w.\-]+)")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _out_shape_bytes(line: str) -> int:
+    """Bytes of the op's output (the shape(s) before the op name)."""
+    m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)", line)
+    if not m:
+        return 0
+    rhs = m.group(1)
+    opm = re.search(r"\b([\w\-]+)\(", rhs)
+    head = rhs[: opm.start()] if opm else rhs
+    return _shape_bytes(head)
+
+
+@dataclass
+class CompStats:
+    dot_flops: float = 0.0
+    bytes_touched: float = 0.0
+    collective_bytes: dict = field(default_factory=dict)
+    collective_counts: dict = field(default_factory=dict)
+    calls: list = field(default_factory=list)         # (name, is_fusion)
+    fusion_sites: list = field(default_factory=list)  # (name, out_bytes)
+    whiles: list = field(default_factory=list)        # (body, cond)
+    root_is_dus: bool = False   # root (or tuple root) is an in-place update
+
+
+def _parse_computations(text: str) -> dict:
+    comps: dict[str, list] = {}
+    cur = None
+    for line in text.splitlines():
+        stripped = line.rstrip()
+        # computation headers start at column 0 and end with '{'
+        if stripped and not line.startswith((" ", "\t")) and \
+                stripped.endswith("{"):
+            hdr = _COMP_HDR.match(stripped)
+            if hdr:
+                cur = hdr.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None:
+            if stripped.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(stripped)
+    return comps
+
+
+def _dot_flops(line: str, symbols: dict) -> float:
+    """2 * prod(out dims) * prod(contracting dims) for dot ops.  Operand
+    shapes are resolved via ``symbols`` (name -> dims list) because optimized
+    HLO references operands by name only."""
+    m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)", line)
+    if not m:
+        return 0.0
+    rhs = m.group(1)
+    if not re.search(r"\bdot\(", rhs):
+        return 0.0
+    head = rhs.split("dot(", 1)[0]
+    out_dims = 1
+    sm = _SHAPE_RE.search(head)
+    if sm:
+        for d in sm.group(2).split(","):
+            if d:
+                out_dims *= int(d)
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+    contract = 1
+    opm = re.search(r"dot\(([^)]*)\)", rhs)
+    if cm and opm:
+        names = [a.strip().lstrip("%") for a in opm.group(1).split(",")]
+        lhs_dims = symbols.get(names[0]) if names else None
+        if lhs_dims is not None:
+            for idx in cm.group(1).split(","):
+                if idx and int(idx) < len(lhs_dims):
+                    contract *= lhs_dims[int(idx)]
+    return 2.0 * out_dims * contract
+
+
+def _analyze_comp(lines: list) -> CompStats:
+    st = CompStats(collective_bytes={c: 0 for c in COLLECTIVES},
+                   collective_counts={c: 0 for c in COLLECTIVES})
+    dus_names = set()
+    for line in lines:
+        dm = re.match(r"\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=.*"
+                      r"dynamic-update-slice\(", line)
+        if dm:
+            dus_names.add(dm.group(1))
+        if "ROOT" in line:
+            if "dynamic-update-slice(" in line:
+                st.root_is_dus = True
+            tm = re.search(r"ROOT\s+%?[\w.\-]+\s*=\s*\([^=]*\)?\s*tuple\(([^)]*)\)",
+                           line)
+            if tm:
+                ops = [o.strip().lstrip("%") for o in tm.group(1).split(",")]
+                if ops and all(o in dus_names for o in ops if o):
+                    st.root_is_dus = True
+    # symbol table: op name -> output dims (for dot contraction lookup)
+    symbols: dict = {}
+    for line in lines:
+        dm = re.match(r"\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\w+)\[([\d,]*)\]",
+                      line)
+        if dm:
+            symbols[dm.group(1)] = [int(d) for d in dm.group(3).split(",") if d]
+    FREE_OPS = ("get-tuple-element(", "tuple(", "parameter(", "bitcast(",
+                "constant(", "iota(", "after-all(", "reshape(",
+                "partition-id(", "replica-id(")
+    for line in lines:
+        rhs_m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)", line)
+        rhs = rhs_m.group(1) if rhs_m else ""
+        clean = line.split("metadata=")[0].split("backend_config=")[0]
+        if any(f" {op}" in rhs or rhs.split("{", 1)[-1].startswith(op) or
+               re.search(rf"\b{re.escape(op[:-1])}\(", rhs)
+               for op in FREE_OPS):
+            pass  # layout/tuple plumbing: no HBM traffic
+        elif "dynamic-update-slice(" in rhs:
+            # in-place update: traffic = the update operand, not the buffer
+            dm = re.search(r"dynamic-update-slice\(([^)]*)\)", rhs)
+            upd = dm.group(1).split(",")[1].strip().lstrip("%") if dm else ""
+            dims = symbols.get(upd)
+            if dims is not None:
+                n = 1
+                for d in dims:
+                    n *= d
+                st.bytes_touched += 2 * n * 4  # read+write, assume f32 worst
+        else:
+            st.bytes_touched += _shape_bytes(clean)
+        st.dot_flops += _dot_flops(line, symbols)
+        if " while(" in rhs or rhs.startswith("while("):
+            body = re.search(r"body=\{?%?([\w.\-]+)", rhs)
+            cond = re.search(r"condition=\{?%?([\w.\-]+)", rhs)
+            if body and cond:
+                st.whiles.append((body.group(1), cond.group(1)))
+            continue
+        called = False
+        for kind in ("fusion", "call", "custom-call", "conditional",
+                     "reduce", "sort", "scatter", "map", "reduce-window"):
+            if f" {kind}(" in rhs or rhs.startswith(f"{kind}("):
+                for cm in _CALL_RE.finditer(rhs):
+                    if kind == "fusion":
+                        # bytes decided at aggregation: in-place (DUS-root)
+                        # fusions count the update, others their output
+                        st.fusion_sites.append(
+                            (cm.group(1), _out_shape_bytes(line)))
+                        st.bytes_touched -= _shape_bytes(
+                            line.split("metadata=")[0]
+                            .split("backend_config=")[0])
+                    st.calls.append((cm.group(1), kind == "fusion"))
+                called = True
+                break
+        if called:
+            continue
+        for c in COLLECTIVES:
+            if re.search(rf"\b{c}(?:-start)?\(", rhs):
+                nb = _out_shape_bytes(line)
+                st.collective_bytes[c] += nb
+                st.collective_counts[c] += 1
+                break
+    return st
+
+
+def _trip_count(cond_lines: list) -> int:
+    """Trip count from the condition's ROOT compare: resolve its constant
+    operand (falling back to the largest constant if the compare is wrapped
+    in a fusion whose operands we cannot see)."""
+    consts: dict[str, int] = {}
+    for line in cond_lines:
+        m = re.match(r"\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*s\d+\[\]\s*"
+                     r"constant\((\d+)\)", line)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for line in cond_lines:
+        cm = re.search(r"(?:compare|fusion)\(([^)]*)\)", line)
+        if cm and ("ROOT" in line or "compare" in line):
+            for op in cm.group(1).split(","):
+                name = op.strip().lstrip("%")
+                if name in consts:
+                    return consts[name]
+    return max(consts.values(), default=1)
+
+
+@dataclass
+class HloStats:
+    dot_flops: float
+    bytes_touched: float
+    collective_bytes: dict
+    collective_counts: dict
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def analyze_hlo(text: str, entry: str | None = None) -> HloStats:
+    comps = _parse_computations(text)
+    stats = {name: _analyze_comp(lines) for name, lines in comps.items()}
+
+    # entry = computation not called by any other (fallback: 'main')
+    called = set()
+    for st in stats.values():
+        called.update(n for n, _ in st.calls)
+        for b, c in st.whiles:
+            called.add(b)
+            called.add(c)
+    if entry is None:
+        entries = [n for n in comps if n not in called and "main" in n]
+        entry = entries[0] if entries else next(
+            (n for n in comps if n not in called), "main")
+
+    memo: dict[str, HloStats] = {}
+
+    def agg(name: str, depth=0) -> HloStats:
+        if name in memo:
+            return memo[name]
+        if name not in stats or depth > 50:
+            return HloStats(0, 0, {c: 0 for c in COLLECTIVES},
+                            {c: 0 for c in COLLECTIVES})
+        st = stats[name]
+        flops = st.dot_flops
+        byts = st.bytes_touched
+        cb = dict(st.collective_bytes)
+        cc = dict(st.collective_counts)
+
+        def add(sub: HloStats, mult: float):
+            nonlocal flops, byts
+            flops += sub.dot_flops * mult
+            byts += sub.bytes_touched * mult
+            for c in COLLECTIVES:
+                cb[c] += sub.collective_bytes[c] * mult
+                cc[c] += sub.collective_counts[c] * mult
+
+        fusion_out = dict(st.fusion_sites)
+        for callee, is_fusion in st.calls:
+            sub = agg(callee, depth + 1)
+            if is_fusion:
+                # in-place (DUS-rooted) fusions: traffic = the update ops
+                # inside the body; other fusions: their output write
+                site_bytes = stats[callee].bytes_touched \
+                    if callee in stats and stats[callee].root_is_dus \
+                    else fusion_out.get(callee, 0.0)
+                sub = HloStats(sub.dot_flops, site_bytes,
+                               sub.collective_bytes, sub.collective_counts)
+            add(sub, 1.0)
+        for body, cond in st.whiles:
+            trip = _trip_count(comps.get(cond, []))
+            add(agg(body, depth + 1), trip)
+            add(agg(cond, depth + 1), trip)
+        out = HloStats(flops, byts, cb, cc)
+        memo[name] = out
+        return out
+
+    return agg(entry)

@@ -1,0 +1,11 @@
+"""qwen2-7b [dense]: 28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064,
+QKV bias [arXiv:2407.10671]."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-7b", family="lm",
+    n_layers=28, d_model=3584, n_heads=28, n_kv=4, head_dim=128,
+    d_ff=18944, vocab=152064, qkv_bias=True, rope_theta=1_000_000.0,
+    skip_shapes=("long_500k",),
+    skip_reason="pure full attention; sub-quadratic required for 500k",
+)

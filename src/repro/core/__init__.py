@@ -1,0 +1,25 @@
+"""Core library: the paper's star-product EDST theory + collective schedules."""
+from .collectives import (AllreduceSchedule, CostModel, TreeSchedule,
+                          allreduce_schedule, simulate_allreduce,
+                          tree_schedule)
+from .edst_rt import max_edsts, pack_forests
+from .edst_star import (StarEDSTs, maximal_edsts, one_sided_edsts,
+                        property_461_edsts, star_edsts, universal_edsts)
+from .factor_edsts import EDSTSet, edsts_for
+from .fault import (FailureEvent, FaultTolerantAllreduce, rebalance_chunks,
+                    rebuild_edsts, surviving_trees)
+from .graph import Graph
+from .star import StarProduct, cartesian, random_star, shift_star, star_with
+from .topologies import (bundlefly, device_topology, edst_set_for, hyperx,
+                         mesh_nd, polarstar, slimfly, torus)
+
+__all__ = [
+    "AllreduceSchedule", "CostModel", "TreeSchedule", "allreduce_schedule",
+    "simulate_allreduce", "tree_schedule", "max_edsts", "pack_forests",
+    "StarEDSTs", "maximal_edsts", "one_sided_edsts", "property_461_edsts",
+    "star_edsts", "universal_edsts", "EDSTSet", "edsts_for", "FailureEvent",
+    "FaultTolerantAllreduce", "rebalance_chunks", "rebuild_edsts",
+    "surviving_trees", "Graph", "StarProduct", "cartesian", "random_star",
+    "shift_star", "star_with", "bundlefly", "device_topology", "edst_set_for",
+    "hyperx", "mesh_nd", "polarstar", "slimfly", "torus",
+]

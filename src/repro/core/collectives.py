@@ -1,0 +1,223 @@
+"""Multi-tree Allreduce schedules from EDST sets (paper Sec. 1.1 payoff).
+
+A set of k EDSTs yields k contention-free reduction/broadcast trees: the
+gradient is split into k chunks, chunk j is reduced leaves->root along tree j
+and broadcast root->leaves, all trees concurrently.  Edge-disjointness
+guarantees no two trees ever use the same physical link (asserted).
+
+Also provides the alpha-beta cost model comparing EDST k-tree allreduce
+against ring and single-tree baselines, in both "endpoint reduction" (TPU)
+and "in-network reduction" (paper's switch-compute) modes, plus a NumPy
+packet-level simulator used for correctness tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .graph import canon, tree_depth_levels
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TreeSchedule:
+    """Reduce/broadcast rounds for one spanning tree."""
+    n: int
+    root: int
+    tree: frozenset
+    reduce_rounds: list   # list[rounds]; each round = list[(src, dst)]
+    bcast_rounds: list
+
+    @property
+    def depth(self) -> int:
+        return len(self.bcast_rounds)
+
+
+def tree_schedule(n: int, tree, root: int | None = None) -> TreeSchedule:
+    tree = frozenset(canon(*e) for e in tree)
+    root = _best_root(n, tree) if root is None else root
+    levels = tree_depth_levels(tree, root)  # levels[d] = [(parent, child)]
+    reduce_rounds = [[(c, p) for p, c in lvl] for lvl in reversed(levels)]
+    bcast_rounds = [list(lvl) for lvl in levels]
+    return TreeSchedule(n, root, tree, reduce_rounds, bcast_rounds)
+
+
+def _best_root(n: int, tree) -> int:
+    """Root minimizing tree depth (a tree center)."""
+    best, best_d = 0, 10**9
+    # probing every vertex is O(n^2); fine for <= few-thousand-node fabrics
+    adj: dict = {}
+    for u, v in tree:
+        adj.setdefault(u, []).append(v)
+        adj.setdefault(v, []).append(u)
+
+    from collections import deque
+
+    def depth_from(r):
+        seen = {r}
+        d, frontier = 0, [r]
+        while frontier:
+            nxt = []
+            for u in frontier:
+                for w in adj.get(u, ()):
+                    if w not in seen:
+                        seen.add(w)
+                        nxt.append(w)
+            if nxt:
+                d += 1
+            frontier = nxt
+        return d
+
+    for r in range(n):
+        d = depth_from(r)
+        if d < best_d:
+            best, best_d = r, d
+    return best
+
+
+@dataclass
+class AllreduceSchedule:
+    """k concurrent tree schedules (one chunk per tree)."""
+    n: int
+    trees: list  # list[TreeSchedule]
+
+    @property
+    def k(self) -> int:
+        return len(self.trees)
+
+    @property
+    def depth(self) -> int:
+        return max(t.depth for t in self.trees)
+
+    def check_contention_free(self) -> bool:
+        """No physical link is used by two different trees (EDST property)."""
+        seen = set()
+        for ts in self.trees:
+            for e in ts.tree:
+                if e in seen:
+                    return False
+                seen.add(e)
+        return True
+
+    def global_rounds(self, phase: str):
+        """Round r = union of every tree's round-r messages, tagged by tree."""
+        rounds_attr = "reduce_rounds" if phase == "reduce" else "bcast_rounds"
+        nrounds = max(len(getattr(t, rounds_attr)) for t in self.trees)
+        out = []
+        for r in range(nrounds):
+            msgs = []
+            for j, ts in enumerate(self.trees):
+                rr = getattr(ts, rounds_attr)
+                if r < len(rr):
+                    msgs.extend((j, s, d) for s, d in rr[r])
+            out.append(msgs)
+        return out
+
+
+def allreduce_schedule(n: int, trees, roots=None) -> AllreduceSchedule:
+    roots = roots or [None] * len(trees)
+    sched = AllreduceSchedule(n, [tree_schedule(n, t, r)
+                                  for t, r in zip(trees, roots)])
+    assert sched.check_contention_free(), "trees share a link"
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# NumPy packet-level simulator (correctness + link-load accounting)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SimResult:
+    ok: bool
+    rounds: int
+    max_link_load: int      # max messages crossing one link in one round
+    per_link_bytes: dict    # link -> total bytes carried
+
+
+def simulate_allreduce(sched: AllreduceSchedule, values: np.ndarray,
+                       chunk_bytes: int = 1) -> SimResult:
+    """values: (n, d) per-node vectors, d divisible by k.  Executes the
+    schedule literally and checks every node ends with the global sum."""
+    n, d = values.shape
+    k = sched.k
+    assert d % k == 0
+    m = d // k
+    chunks = values.reshape(n, k, m).astype(np.float64).copy()
+    expected = values.sum(axis=0)
+    link_bytes: dict = {}
+    max_load = 0
+    rounds = 0
+
+    for phase in ("reduce", "bcast"):
+        for msgs in sched.global_rounds(phase):
+            rounds += 1
+            loads: dict = {}
+            staged = []
+            for j, s, dst in msgs:
+                payload = chunks[s, j].copy()
+                staged.append((j, dst, payload))
+                e = canon(s, dst)
+                loads[e] = loads.get(e, 0) + 1
+                link_bytes[e] = link_bytes.get(e, 0) + m * chunk_bytes
+            for j, dst, payload in staged:
+                if phase == "reduce":
+                    chunks[dst, j] += payload
+                else:
+                    chunks[dst, j] = payload
+            if loads:
+                max_load = max(max_load, max(loads.values()))
+
+    final = chunks.reshape(n, d)
+    ok = bool(np.allclose(final, expected[None, :].repeat(n, 0)))
+    return SimResult(ok, rounds, max_load, link_bytes)
+
+
+# ---------------------------------------------------------------------------
+# alpha-beta cost model (paper Sec. 1.1: collective bandwidth)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CostModel:
+    link_bw: float = 50e9      # bytes/s per link (ICI default)
+    alpha: float = 1e-6        # per-message latency (s)
+    segment: int = 256 * 1024  # pipeline segment bytes
+
+    def ring_allreduce(self, nbytes: float, p: int) -> float:
+        """bidirectional-ring reduce-scatter + all-gather."""
+        steps = 2 * (p - 1)
+        return steps * self.alpha + 2 * nbytes * (p - 1) / p / self.link_bw
+
+    def edst_tree_allreduce(self, nbytes: float, sched: AllreduceSchedule,
+                            in_network: bool = False) -> float:
+        """k trees, chunk nbytes/k each, segment-pipelined along tree depth.
+
+        endpoint mode (TPU): reduce up + broadcast down -> 2 traversals.
+        in-network mode (paper's switches): single traversal each way but the
+        switch reduces, so the endpoint link carries each chunk once -> the
+        2x disappears into the fabric.
+        """
+        k = sched.k
+        chunk = nbytes / k
+        t = 0.0
+        for ts in sched.trees:
+            depth = max(ts.depth, 1)
+            nseg = max(1, int(np.ceil(chunk / self.segment)))
+            seg = chunk / nseg
+            fill = depth * (self.alpha + seg / self.link_bw)
+            stream = (nseg - 1) * seg / self.link_bw
+            traversals = 1.0 if in_network else 2.0
+            t = max(t, traversals * (fill + stream))
+        return t
+
+    def single_tree_allreduce(self, nbytes: float, sched_one: TreeSchedule,
+                              in_network: bool = False) -> float:
+        one = AllreduceSchedule(sched_one.n, [sched_one])
+        return self.edst_tree_allreduce(nbytes, one, in_network)
+
+    def speedup_vs_ring(self, nbytes: float, p: int,
+                        sched: AllreduceSchedule) -> float:
+        return self.ring_allreduce(nbytes, p) / self.edst_tree_allreduce(nbytes, sched)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships as <name>/kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling), <name>/ops.py (jit'd wrapper; interpret=True on CPU) and
+<name>/ref.py (pure-jnp oracle used by the models and the tests).
+"""

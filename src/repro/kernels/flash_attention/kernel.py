@@ -1,0 +1,136 @@
+"""Pallas TPU flash attention (causal GQA, optional sliding window).
+
+Grid: (batch * kv_heads, num_q_blocks, num_kv_blocks) -- the kv dimension is
+innermost, so the online-softmax carry (m, l, acc) lives in VMEM scratch and
+persists across kv steps.  GQA is handled by flattening the q-per-kv group
+into the row dimension: the q tile is (q_block * group, head_dim), giving a
+single (rows x d) @ (d x kv_block) MXU matmul per step.
+
+Causal / windowed kv blocks that are entirely masked are skipped with
+pl.when (no FLOPs on TPU, unlike a masked dense loop).  Default blocks
+(q_block=256 rows, kv_block=512) keep tiles MXU-aligned (multiples of
+(8,128) for f32/bf16 at head_dim 64..256) and the VMEM working set
+(q + k + v + scores + acc) at a few MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal, window, kv_block, q_block, group):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    q_lo = pl.program_id(1) * q_block      # absolute position of q row 0
+    k_lo = ki * kv_block
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # block-level reachability (skip fully-masked kv blocks entirely)
+    live = jnp.asarray(True)
+    if causal:
+        live = jnp.logical_and(live, k_lo <= q_lo + q_block - 1)
+    if window is not None:
+        live = jnp.logical_and(live, k_lo + kv_block - 1 > q_lo - window)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[...].astype(jnp.float32)        # (q_block*group, d)
+        k = k_ref[...].astype(jnp.float32)        # (kv_block, d)
+        v = v_ref[...].astype(jnp.float32)
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)   # (rows, kv_block)
+        scores = scores * (1.0 / np.sqrt(q.shape[-1]))
+
+        rows = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        t_abs = q_lo + rows // group
+        s_abs = k_lo + cols
+        if causal:
+            scores = jnp.where(s_abs <= t_abs, scores, NEG_INF)
+        if window is not None:
+            scores = jnp.where(s_abs > t_abs - window, scores, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, scores.max(axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_block",
+                                             "kv_block", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    q_block=256, kv_block=512, interpret=False):
+    """q: (B, S, H, D); k, v: (B, T, KV, D).  H = KV * group.
+    Returns (B, S, H, D).  S, T padded internally to block multiples
+    (padded q rows produce garbage that is sliced off; padded kv columns are
+    masked by causality -- for causal=False the caller must pass T already
+    block-aligned)."""
+    b, s, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    qb = min(q_block, s)
+    kb = min(kv_block, t)
+    s_pad = -(-s // qb) * qb
+    t_pad = -(-t // kb) * kb
+    if not causal and t_pad != t:
+        raise ValueError("causal=False requires block-aligned T")
+    if s_pad != s:
+        q = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    if t_pad != t:
+        k = jnp.pad(k, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+
+    # (B, S, KV, G, D) -> (B*KV, S*G, D): row = s * group + g
+    qr = q.reshape(b, s_pad, kv, group, d).transpose(0, 2, 1, 3, 4) \
+          .reshape(b * kv, s_pad * group, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * kv, t_pad, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * kv, t_pad, d)
+
+    nq, nk = s_pad // qb, t_pad // kb
+    rows = qb * group
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, causal=causal, window=window,
+                          kv_block=kb, q_block=qb, group=group),
+        grid=(b * kv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, rows, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((None, kb, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((None, kb, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, rows, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kv, s_pad * group, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rows, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+
+    out = out.reshape(b, kv, s_pad, group, d).transpose(0, 2, 1, 3, 4)
+    return out.reshape(b, s_pad, h, d)[:, :s]

@@ -1,0 +1,25 @@
+"""jit'd entry point: Pallas kernel on TPU, interpret-mode kernel or jnp
+oracle elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention
+from .ref import attention_ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, *, causal=True, window=None, q_block=256,
+              kv_block=512, use_pallas=None):
+    """Dispatch: Pallas (TPU), Pallas-interpret (explicitly requested), or
+    the jnp oracle (CPU default -- interpret mode is too slow for real use)."""
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if use_pallas:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               q_block=q_block, kv_block=kv_block,
+                               interpret=not on_tpu())
+    return attention_ref(q, k, v, causal=causal, window=window)

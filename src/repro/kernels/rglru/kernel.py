@@ -1,0 +1,79 @@
+"""Pallas TPU kernel for the RG-LRU gated linear recurrence.
+
+h_t = a_t * h_{t-1} + b_t, elementwise over the width dim -- lane-parallel,
+sequential over time.  Grid: (B, num_width_tiles, num_chunks), chunks
+innermost; the carry h lives in VMEM scratch and persists across chunks.
+Within a chunk the recurrence runs as a fori_loop over rows of the (chunk,
+width_tile) block -- the width_tile (default 512 lanes) keeps the VPU busy
+while time stays sequential, which is how Griffin's own TPU kernel schedules
+it (the recurrence is not associative-scanned on TPU either; see
+arXiv:2402.19427 App. A: "a linear scan").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, hlast_ref, h_ref, *, chunk):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = h0_ref[...].astype(jnp.float32)
+
+    def step(i, h):
+        h = a_ref[i, :].astype(jnp.float32) * h + b_ref[i, :].astype(jnp.float32)
+        o_ref[i, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[0:1, :][0])
+    h_ref[...] = h[None]
+
+    @pl.when(ci == nc - 1)
+    def _emit():
+        hlast_ref[...] = h[None].astype(hlast_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "width_tile",
+                                             "interpret"))
+def rglru_scan(a, bx, h0=None, *, chunk=128, width_tile=512, interpret=False):
+    """a, bx: (B, T, W) -> (h (B,T,W), h_last (B,W)).  h0: (B, W) or None."""
+    b, t, w = a.shape
+    c = min(chunk, t)
+    wt = min(width_tile, w)
+    t_pad = -(-t // c) * c
+    w_pad = -(-w // wt) * wt
+    pad = ((0, 0), (0, t_pad - t), (0, w_pad - w))
+    if t_pad != t or w_pad != w:
+        a = jnp.pad(a, pad, constant_values=1.0)   # a=1, b=0: h passes through
+        bx = jnp.pad(bx, pad)
+    h0 = jnp.zeros((b, w_pad), jnp.float32) if h0 is None else \
+        jnp.pad(h0.astype(jnp.float32), ((0, 0), (0, w_pad - w)))
+
+    out, hlast = pl.pallas_call(
+        functools.partial(_rglru_kernel, chunk=c),
+        grid=(b, w_pad // wt, t_pad // c),
+        in_specs=[
+            pl.BlockSpec((None, c, wt), lambda bi, wi, ci: (bi, ci, wi)),
+            pl.BlockSpec((None, c, wt), lambda bi, wi, ci: (bi, ci, wi)),
+            pl.BlockSpec((None, 1, wt), lambda bi, wi, ci: (bi, 0, wi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, c, wt), lambda bi, wi, ci: (bi, ci, wi)),
+            pl.BlockSpec((None, 1, wt), lambda bi, wi, ci: (bi, 0, wi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t_pad, w_pad), a.dtype),
+            jax.ShapeDtypeStruct((b, 1, w_pad), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, wt), jnp.float32)],
+        interpret=interpret,
+    )(a, bx, h0[:, None, :])
+
+    return out[:, :t, :w], hlast[:, 0, :w]

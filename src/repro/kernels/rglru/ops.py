@@ -1,0 +1,16 @@
+"""jit'd entry point for the RG-LRU scan."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import rglru_scan
+from .ref import rglru_ref
+
+
+def lru_scan(a, bx, h0=None, *, chunk=128, use_pallas=None):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return rglru_scan(a, bx, h0, chunk=chunk,
+                          interpret=jax.default_backend() != "tpu")
+    return rglru_ref(a, bx, h0)

@@ -1,0 +1,8 @@
+"""Oracle: the associative-scan RG-LRU from the model (itself the jnp
+reference path)."""
+from repro.models.rglru import rg_lru_scan  # noqa: F401
+
+
+def rglru_ref(a, bx, h0=None):
+    h = rg_lru_scan(a, bx, h0=h0)
+    return h, h[:, -1]

@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: multi-child partial-sum combine for the EDST tree
+reduce (the per-round "in-switch" reduction, executed on-chip on TPU).
+
+out = partial + sum_over_children(recv) over a length-L flat buffer, tiled so
+each grid step streams one (children, tile) block through VMEM.  f32
+accumulation regardless of payload dtype (gradient chunks are bf16 on the
+wire when quantization is off).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _combine_kernel(recv_ref, part_ref, o_ref):
+    acc = part_ref[...].astype(jnp.float32)
+    acc = acc + jnp.sum(recv_ref[...].astype(jnp.float32), axis=0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def tree_combine(recv, partial, *, tile=65536, interpret=False):
+    """recv: (n_children, L); partial: (L,) -> (L,)."""
+    nch, l = recv.shape
+    tl = min(tile, l)
+    l_pad = -(-l // tl) * tl
+    if l_pad != l:
+        recv = jnp.pad(recv, ((0, 0), (0, l_pad - l)))
+        partial = jnp.pad(partial, (0, l_pad - l))
+
+    out = pl.pallas_call(
+        _combine_kernel,
+        grid=(l_pad // tl,),
+        in_specs=[
+            pl.BlockSpec((nch, tl), lambda i: (0, i)),
+            pl.BlockSpec((tl,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tl,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((l_pad,), partial.dtype),
+        interpret=interpret,
+    )(recv, partial)
+    return out[:l]

@@ -1,0 +1,16 @@
+"""jit'd entry point for tree_combine."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import tree_combine
+from .ref import tree_combine_ref
+
+
+def combine(recv, partial, *, use_pallas=None):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return tree_combine(recv, partial,
+                            interpret=jax.default_backend() != "tpu")
+    return tree_combine_ref(recv, partial)

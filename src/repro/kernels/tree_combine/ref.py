@@ -1,0 +1,7 @@
+"""Oracle for the tree-combine kernel."""
+import jax.numpy as jnp
+
+
+def tree_combine_ref(recv, partial):
+    return (partial.astype(jnp.float32)
+            + recv.astype(jnp.float32).sum(0)).astype(partial.dtype)

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel for the RWKV-6 chunked WKV recurrence.
+
+Grid: (B * H, num_chunks) with the chunk dimension innermost; the per-head
+state S (key_dim x value_dim, f32) lives in VMEM scratch and persists across
+chunks.  Each step does three small MXU matmuls -- (c,n)@(n,c) intra-chunk
+scores, (c,c)@(c,n) intra output, (c,n)@(n,n) state application -- plus the
+log-space decay algebra from the reference (exact, stable: all exponentials
+are of non-positive numbers after the per-chunk shift).
+
+Chunk length and head dim default to 64: tiles are (64, 64), aligned to the
+f32 (8, 128) VMEM layout after Mosaic padding, and the whole working set
+(4 inputs + scores + state) is < 1 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, sout_ref, s_ref,
+                 *, chunk):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[...].astype(jnp.float32)      # (c, n)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    lw = lw_ref[...].astype(jnp.float32)    # log decay, <= 0
+    u = u_ref[...].astype(jnp.float32)      # (1, n) bonus
+
+    lcum = jnp.cumsum(lw, axis=0)
+    lprev = lcum - lw
+    # two-factor log-space shift; clamp is inert while the per-chunk
+    # cumulative decay range stays < 85 (true for RWKV6's w parametrization
+    # at chunk <= 128) and avoids inf*0 NaNs beyond (see ref for details)
+    mx = jnp.max(-lcum, axis=0, keepdims=True)
+    kd = k * jnp.exp(jnp.clip(-lcum + mx, -85.0, 85.0))
+    rd = r * jnp.exp(jnp.clip(lprev - mx, -85.0, 85.0))
+    scores = jax.lax.dot_general(rd, kd, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (c,c)
+    rows = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(cols < rows, scores, 0.0)   # strictly lower triangle
+
+    diag = jnp.sum(r * u * k, axis=1, keepdims=True)          # (c, 1)
+    o = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    o = o + diag * v
+    o = o + jax.lax.dot_general(r * jnp.exp(lprev), s_ref[...],
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    o_ref[...] = o.astype(o_ref.dtype)
+
+    lc = lcum[-1:, :]                                          # (1, n)
+    kdecay = k * jnp.exp(lc - lcum)
+    s_new = jnp.exp(lc).T * s_ref[...] + jax.lax.dot_general(
+        kdecay, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    s_ref[...] = s_new
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        sout_ref[...] = s_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, logw, u, *, chunk=64, interpret=False):
+    """r,k,v,logw: (B, T, H, N); u: (H, N).
+    Returns (out (B,T,H,N), final state (B,H,N,N))."""
+    b, t, h, n = r.shape
+    c = min(chunk, t)
+    t_pad = -(-t // c) * c
+    if t_pad != t:
+        pad = ((0, 0), (0, t_pad - t), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+        logw = jnp.pad(logw, pad)
+    nc = t_pad // c
+
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, t_pad, n)
+
+    rr, kk, vv, lw = map(to_bh, (r, k, v, logw))
+    ub = jnp.tile(u, (b, 1)).reshape(b * h, 1, n)
+
+    out, sfin = pl.pallas_call(
+        functools.partial(_wkv6_kernel, chunk=c),
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((None, c, n), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((None, c, n), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((None, c, n), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((None, c, n), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((None, 1, n), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, c, n), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((None, n, n), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, t_pad, n), r.dtype),
+            jax.ShapeDtypeStruct((b * h, n, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(rr, kk, vv, lw, ub)
+
+    out = out.reshape(b, h, t_pad, n).transpose(0, 2, 1, 3)[:, :t]
+    return out, sfin.reshape(b, h, n, n)

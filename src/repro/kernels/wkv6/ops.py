@@ -1,0 +1,16 @@
+"""jit'd entry point for WKV6: Pallas on TPU, jnp-chunked elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import wkv6
+from .ref import wkv6_ref
+
+
+def wkv(r, k, v, logw, u, *, chunk=64, use_pallas=None):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return wkv6(r, k, v, logw, u, chunk=chunk,
+                    interpret=jax.default_backend() != "tpu")
+    return wkv6_ref(r, k, v, logw, u, chunk=chunk)

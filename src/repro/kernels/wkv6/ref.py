@@ -1,0 +1,7 @@
+"""Oracle: the jnp chunked WKV6 (itself validated against the naive
+sequential recurrence in tests)."""
+from repro.models.rwkv6 import wkv6_chunked, wkv6_step  # noqa: F401
+
+
+def wkv6_ref(r, k, v, logw, u, chunk=64):
+    return wkv6_chunked(r, k, v, logw, u, chunk=chunk)

@@ -1,0 +1,85 @@
+"""Elastic rescaling: resume a checkpoint onto a DIFFERENT mesh and rebuild
+the EDST collective schedule for the new fabric.
+
+The two halves of elasticity here:
+  * parameters/optimizer state: checkpoints store fully-gathered host
+    arrays; ``restore`` re-places them with the *new* mesh's shardings
+    (logical shapes are mesh-independent, so any mesh whose divisibility
+    rules accept the shapes works);
+  * collectives: the EDST packing is a function of the device fabric, so a
+    changed fabric (fewer pods, a resized data axis, a failed chip excluded)
+    gets a fresh maximal packing via the paper's constructions (or
+    Roskind-Tarjan on an irregular residual fabric).
+
+    python -m repro.launch.elastic --ckpt-dir /tmp/ck \
+        --from-mesh 4,4 --to-mesh 2,8 --arch smollm-135m --reduced
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import configs
+from repro.ckpt import latest_step, restore
+from repro.dist import sharding as shd
+from repro.dist.steps import dp_axes_of, edst_spec_for_mesh
+from repro.models.api import build
+from repro.optim import AdamW, cosine_schedule
+
+
+def reshard_checkpoint(api, opt, ckpt_dir: str, mesh):
+    """Load the latest checkpoint and place it on ``mesh``.  Returns
+    (params, opt_state, step)."""
+    key = jax.random.PRNGKey(0)
+    with jax.set_mesh(mesh):
+        params, axes = api.init(key)
+        opt_state = opt.init(params)
+        pshard = shd.tree_shardings(axes, params, mesh)
+        oshard = type(opt_state)(
+            jax.tree.map(lambda _: jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()), opt_state.step),
+            pshard, pshard)
+        state, step, _ = restore(ckpt_dir, {"p": params, "o": opt_state},
+                                 shardings={"p": pshard, "o": oshard})
+    if state is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    return state["p"], state["o"], step
+
+
+def rebuild_schedule(mesh, dp_torus_shape=None):
+    """Fresh EDST allreduce spec for the (possibly new) DP fabric, or None
+    when the mesh has no DP extent (single data shard: nothing to sync)."""
+    from repro.dist.steps import dp_size
+    if dp_size(mesh) <= 1:
+        return None
+    return edst_spec_for_mesh(tuple(mesh.devices.shape),
+                              tuple(mesh.axis_names), dp_torus_shape)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--to-mesh", required=True)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    api = build(cfg)
+    dims = tuple(int(x) for x in args.to_mesh.split(","))
+    names = ("pod", "data", "model")[-len(dims):]
+    mesh = jax.make_mesh(dims, names)
+    opt = AdamW(cosine_schedule(3e-4, 10, 100))
+    params, opt_state, step = reshard_checkpoint(api, opt, args.ckpt_dir, mesh)
+    spec = rebuild_schedule(mesh)
+    k = spec.k if spec is not None else 0
+    print(f"[elastic] resumed step {step} onto mesh {dims}; "
+          f"EDST schedule rebuilt with k={k} trees")
+    return params, opt_state, step
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model zoo: pure-JAX scan-over-layers implementations of the assigned
+architectures.  Parameters are nested dicts of arrays; a parallel tree of
+logical-axis tuples drives sharding (see repro.dist.sharding)."""

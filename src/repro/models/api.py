@@ -1,0 +1,144 @@
+"""Unified model API: one entry point per assigned architecture family.
+
+``build(cfg)`` returns a :class:`ModelAPI` exposing init / loss / prefill /
+decode plus ``input_specs(shape)`` (ShapeDtypeStruct stand-ins, the dry-run
+contract) and logical batch axes for sharding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec
+from . import encdec, rglru, rwkv6, transformer, vlm
+
+ENC_LEN_FOR_DECODE = 4_096   # encoder length used by enc-dec decode cells
+
+
+@dataclass
+class ModelAPI:
+    cfg: ArchConfig
+    init: Callable          # key -> (params, axes)
+    loss_fn: Callable       # (params, batch) -> (loss, metrics)
+    prefill_fn: Callable    # (params, batch) -> (logits, caches)
+    decode_fn: Callable     # (params, caches, batch) -> (logits, new_caches)
+    init_cache: Callable    # (batch_size, max_len) -> (caches, cache_axes)
+
+    # ---- dry-run stand-ins --------------------------------------------------
+    def input_specs(self, shape: ShapeSpec) -> dict:
+        """ShapeDtypeStruct tree for every model input of this (arch, shape):
+        weak-type-correct, shardable, no device allocation."""
+        cfg, gb, s = self.cfg, shape.global_batch, shape.seq_len
+        i32, act = jnp.int32, cfg.act_dtype
+        f = cfg.family
+        if shape.kind == "train":
+            if f == "encdec":
+                return {"frames": jax.ShapeDtypeStruct((gb, s, cfg.d_model), act),
+                        "tokens": jax.ShapeDtypeStruct((gb, s + 1), i32)}
+            if f == "vlm":
+                n_txt = s - cfg.n_img_tokens
+                return {"patches": jax.ShapeDtypeStruct(
+                            (gb, cfg.n_img_tokens, cfg.d_model), act),
+                        "tokens": jax.ShapeDtypeStruct((gb, n_txt + 1), i32)}
+            return {"tokens": jax.ShapeDtypeStruct((gb, s + 1), i32)}
+        if shape.kind == "prefill":
+            if f == "encdec":
+                return {"frames": jax.ShapeDtypeStruct((gb, s, cfg.d_model), act),
+                        "tokens": jax.ShapeDtypeStruct((gb, s), i32)}
+            if f == "vlm":
+                return {"patches": jax.ShapeDtypeStruct(
+                            (gb, cfg.n_img_tokens, cfg.d_model), act),
+                        "tokens": jax.ShapeDtypeStruct((gb, s - cfg.n_img_tokens), i32)}
+            return {"tokens": jax.ShapeDtypeStruct((gb, s), i32)}
+        # decode: one new token against a cache of length s
+        batch = {"tokens": jax.ShapeDtypeStruct((gb, 1), i32),
+                 "cache_len": jax.ShapeDtypeStruct((), i32)}
+        if f == "encdec":
+            batch["cross_k"] = jax.ShapeDtypeStruct(
+                (cfg.n_dec_layers, gb, ENC_LEN_FOR_DECODE, cfg.n_kv,
+                 cfg.head_dim_), jnp.bfloat16)
+            batch["cross_v"] = batch["cross_k"]
+        return batch
+
+    def batch_axes(self, shape: ShapeSpec) -> dict:
+        """Logical axis names per batch input (for sharding rules)."""
+        def spec(_):
+            return ("batch", None, None, None, None)
+        out = {}
+        for k, v in self.input_specs(shape).items():
+            if k == "cache_len":
+                out[k] = ()
+            elif k in ("cross_k", "cross_v"):
+                out[k] = ("layers", "batch", None, "kv_heads", "head_dim")
+            else:
+                out[k] = ("batch",) + (None,) * (len(v.shape) - 1)
+        return out
+
+
+def build(cfg: ArchConfig) -> ModelAPI:
+    f = cfg.family
+    if f in ("lm", "moe"):
+        return ModelAPI(
+            cfg,
+            init=lambda key: transformer.init_lm(cfg, key),
+            loss_fn=lambda p, b: transformer.loss_fn(cfg, p, b),
+            prefill_fn=lambda p, b: transformer.prefill(
+                cfg, p, b["tokens"], b["tokens"].shape[1]),
+            decode_fn=lambda p, c, b: transformer.decode_step(
+                cfg, p, c, b["tokens"], b["cache_len"]),
+            init_cache=lambda bs, ml: transformer.init_cache(cfg, bs, ml),
+        )
+    if f == "encdec":
+        def prefill_fn(p, b):
+            enc_out = encdec.encode(cfg, p, b["frames"])
+            logits, cache = encdec.decode(cfg, p, b["tokens"], enc_out,
+                                          last_only=True)
+            return logits[:, -1], cache
+        return ModelAPI(
+            cfg,
+            init=lambda key: encdec.init_encdec(cfg, key),
+            loss_fn=lambda p, b: encdec.loss_fn(cfg, p, b),
+            prefill_fn=prefill_fn,
+            decode_fn=lambda p, c, b: encdec.decode_step(
+                cfg, p, c, b["tokens"], b["cache_len"],
+                (b["cross_k"], b["cross_v"])),
+            init_cache=lambda bs, ml: encdec.init_cache(cfg, bs, ml),
+        )
+    if f == "vlm":
+        def prefill_fn(p, b):
+            logits, _ = vlm.forward(cfg, p, b["tokens"], b["patches"],
+                                    last_only=True)
+            return logits[:, -1], None
+        return ModelAPI(
+            cfg,
+            init=lambda key: vlm.init_vlm(cfg, key),
+            loss_fn=lambda p, b: vlm.loss_fn(cfg, p, b),
+            prefill_fn=prefill_fn,
+            decode_fn=lambda p, c, b: vlm.decode_step(
+                cfg, p, c, b["tokens"], b["cache_len"]),
+            init_cache=lambda bs, ml: vlm.init_cache(cfg, bs, ml),
+        )
+    if f == "rglru":
+        return ModelAPI(
+            cfg,
+            init=lambda key: rglru.init_rglru_model(cfg, key),
+            loss_fn=lambda p, b: rglru.loss_fn(cfg, p, b),
+            prefill_fn=lambda p, b: rglru.prefill(cfg, p, b["tokens"]),
+            decode_fn=lambda p, c, b: rglru.decode_step(
+                cfg, p, c, b["tokens"], b["cache_len"]),
+            init_cache=lambda bs, ml: rglru.init_cache(cfg, bs, ml),
+        )
+    if f == "rwkv6":
+        return ModelAPI(
+            cfg,
+            init=lambda key: rwkv6.init_rwkv6_model(cfg, key),
+            loss_fn=lambda p, b: rwkv6.loss_fn(cfg, p, b),
+            prefill_fn=lambda p, b: rwkv6.prefill(cfg, p, b["tokens"]),
+            decode_fn=lambda p, c, b: rwkv6.decode_step(
+                cfg, p, c, b["tokens"], b.get("cache_len")),
+            init_cache=lambda bs, ml: rwkv6.init_cache(cfg, bs, ml),
+        )
+    raise ValueError(f"unknown family {f}")

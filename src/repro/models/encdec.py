@@ -1,0 +1,176 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2).
+
+The modality frontend is a stub: the encoder consumes precomputed frame
+embeddings (B, S_enc, d).  Decoder: causal self-attention + cross-attention
+over encoder states, KV-cache decode with precomputed cross K/V.
+LayerNorm + GELU dense MLP, per the m4t transformer family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .transformer import attn_cfg, stack_layers
+
+
+def _ccfg(cfg):
+    """Cross-attention config: no rope, full mask."""
+    import dataclasses
+    return dataclasses.replace(attn_cfg(cfg), use_rope=False, causal=False)
+
+
+def init_enc_layer(cfg, key):
+    ks = jax.random.split(key, 2)
+    p, a = {}, {}
+    p["ln1"], a["ln1"] = L.init_layernorm(cfg.d_model)
+    p["attn"], a["attn"] = L.init_attention(ks[0], attn_cfg(cfg))
+    p["ln2"], a["ln2"] = L.init_layernorm(cfg.d_model)
+    p["mlp"], a["mlp"] = L.init_dense_mlp(ks[1], cfg.d_model, cfg.d_ff)
+    return p, a
+
+
+def init_dec_layer(cfg, key):
+    ks = jax.random.split(key, 3)
+    p, a = {}, {}
+    p["ln1"], a["ln1"] = L.init_layernorm(cfg.d_model)
+    p["attn"], a["attn"] = L.init_attention(ks[0], attn_cfg(cfg))
+    p["lnc"], a["lnc"] = L.init_layernorm(cfg.d_model)
+    p["cross"], a["cross"] = L.init_attention(ks[1], _ccfg(cfg))
+    p["ln2"], a["ln2"] = L.init_layernorm(cfg.d_model)
+    p["mlp"], a["mlp"] = L.init_dense_mlp(ks[2], cfg.d_model, cfg.d_ff)
+    return p, a
+
+
+def init_encdec(cfg, key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["frame_proj"], a["frame_proj"] = (
+        {"w": L.ninit(k1, (cfg.d_model, cfg.d_model))},
+        {"w": ("embed", "embed2")})
+    p["embed"], a["embed"] = L.init_embedding(k2, cfg.vocab_padded, cfg.d_model)
+    p["enc"], a["enc"] = stack_layers(lambda k: init_enc_layer(cfg, k),
+                                      cfg.n_layers, k3)
+    p["dec"], a["dec"] = stack_layers(lambda k: init_dec_layer(cfg, k),
+                                      cfg.n_dec_layers, k4)
+    p["enc_norm"], a["enc_norm"] = L.init_layernorm(cfg.d_model)
+    p["dec_norm"], a["dec_norm"] = L.init_layernorm(cfg.d_model)
+    return p, a
+
+
+def encode(cfg, params, frames):
+    """frames: (B, S, d) precomputed frame embeddings (frontend stub)."""
+    x = jnp.einsum("bsd,de->bse", frames.astype(cfg.act_dtype),
+                   params["frame_proj"]["w"].astype(cfg.act_dtype))
+    pos = jnp.arange(frames.shape[1], dtype=jnp.int32)
+
+    def body(h, lp):
+        o, _ = L.attention(lp["attn"], attn_cfg(cfg), L.layernorm(lp["ln1"], h),
+                           pos, mask_mode="full",
+                           q_block=cfg.q_block, kv_block=cfg.kv_block)
+        h = h + o
+        h = h + L.dense_mlp(lp["mlp"], L.layernorm(lp["ln2"], h))
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc"])
+    return L.layernorm(params["enc_norm"], x)
+
+
+def _dec_block(cfg, lp, x, positions, enc_kv=None, enc_out=None,
+               self_cache=None, cache_len=None):
+    o, new_self = L.attention(lp["attn"], attn_cfg(cfg),
+                              L.layernorm(lp["ln1"], x), positions,
+                              kv_cache=self_cache, cache_len=cache_len,
+                              q_block=cfg.q_block, kv_block=cfg.kv_block)
+    x = x + o
+    # cross-attention: K/V either precomputed (serving) or computed here
+    # from enc_out (training -- avoids a stacked (L,B,S,kv,hd) residual)
+    if enc_kv is not None:
+        ck, cv = enc_kv
+    else:
+        ck = jnp.einsum("bsd,dhk->bshk", enc_out,
+                        lp["cross"]["wk"].astype(enc_out.dtype))
+        cv = jnp.einsum("bsd,dhk->bshk", enc_out,
+                        lp["cross"]["wv"].astype(enc_out.dtype))
+    h = L.layernorm(lp["lnc"], x)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["cross"]["wq"].astype(h.dtype))
+    out = L.sdpa(q, ck.astype(h.dtype), cv.astype(h.dtype), positions,
+                 jnp.arange(ck.shape[1], dtype=jnp.int32), _ccfg(cfg),
+                 mask_mode="full", q_block=cfg.q_block, kv_block=cfg.kv_block)
+    x = x + jnp.einsum("bshk,hkd->bsd", out, lp["cross"]["wo"].astype(h.dtype))
+    x = x + L.dense_mlp(lp["mlp"], L.layernorm(lp["ln2"], x))
+    return x, new_self
+
+
+def cross_kv(cfg, params, enc_out):
+    """Precompute (L_dec, B, S_enc, kv, hd) cross K/V from encoder output."""
+    def one(lp):
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wk"].astype(enc_out.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wv"].astype(enc_out.dtype))
+        return k, v
+    ck, cv = jax.vmap(one)(params["dec"])
+    # hint on the stacked (L, B, S, KV, HD) tensors (inside vmap the
+    # constraint's dims would be off by the mapped dim)
+    return L.head_hint(ck, 3), L.head_hint(cv, 3)
+
+
+def decode(cfg, params, tokens, enc_out=None, *, self_cache=None,
+           cache_len=None, ckv=None, last_only=False, return_hidden=False):
+    """tokens: (B, S_dec).  Returns (logits, new_self_cache).  Cross K/V may
+    be passed precomputed (``ckv``, serving) or derived from ``enc_out``."""
+    x = L.embed(params["embed"], tokens, dtype=cfg.act_dtype)
+    s = tokens.shape[1]
+    base = 0 if cache_len is None else cache_len
+    positions = base + jnp.arange(s, dtype=jnp.int32)
+
+    def body(h, xs):
+        lp = xs["lp"]
+        kv = (xs["k"], xs["v"]) if self_cache is not None else None
+        enc_kv = (xs["ck"], xs["cv"]) if ckv is not None else None
+        h, new_kv = _dec_block(cfg, lp, h, positions, enc_kv=enc_kv,
+                               enc_out=enc_out, self_cache=kv,
+                               cache_len=cache_len)
+        ys = {}
+        if self_cache is not None:
+            ys["k"], ys["v"] = new_kv
+        return h, ys
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    xs = {"lp": params["dec"]}
+    if ckv is not None:
+        xs["ck"], xs["cv"] = ckv
+    if self_cache is not None:
+        xs["k"], xs["v"] = self_cache
+    x, ys = jax.lax.scan(body_fn, x, xs)
+    if last_only:
+        x = x[:, -1:]
+    x = L.layernorm(params["dec_norm"], x)
+    new_cache = (ys["k"], ys["v"]) if self_cache is not None else None
+    if return_hidden:
+        return x, new_cache
+    logits = L.unembed(params["embed"], x, cfg.vocab)
+    return logits, new_cache
+
+
+def loss_fn(cfg, params, batch):
+    enc_out = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    hidden, _ = decode(cfg, params, tokens[:, :-1], enc_out,
+                       return_hidden=True)
+    loss = L.chunked_unembed_xent(params["embed"], hidden, tokens[:, 1:],
+                                  cfg.vocab)
+    return loss, {"xent": loss}
+
+
+def init_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    shape = (cfg.n_dec_layers, batch, max_len, cfg.n_kv, cfg.head_dim_)
+    axes = ("layers", "batch", None, "kv_heads", "head_dim")
+    return ((jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)), (axes, axes))
+
+
+def decode_step(cfg, params, cache, tokens, cache_len, cross_cache):
+    """cross_cache: precomputed (ck, cv) stacked over decoder layers."""
+    logits, new_cache = decode(cfg, params, tokens, self_cache=cache,
+                               cache_len=cache_len, ckv=cross_cache)
+    return logits[:, -1], new_cache

@@ -1,0 +1,288 @@
+"""RecurrentGemma / Griffin: RG-LRU recurrent blocks + local (sliding-window)
+MQA attention in a 1:2 pattern (rec, rec, attn) [arXiv:2402.19427].
+
+The RG-LRU diagonal recurrence h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * (i_t*x_t)
+is evaluated with `jax.lax.associative_scan` (log-depth, TPU-friendly) for
+training/prefill and as a single step for decode.  The temporal conv1d is a
+width-4 causal depthwise convolution expressed as shifted adds.
+
+Decode state: fixed-size LRU state + conv tail + a *ring-buffer* window KV
+cache (slot = position % window, absolute positions tracked for masking) --
+total state is O(window), which is what makes long_500k runnable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from .transformer import attn_cfg, stack_layers
+
+C_RGLRU = 8.0  # Griffin's fixed recurrence sharpness constant
+
+
+def _lru_width(cfg):
+    return cfg.lru_width or cfg.d_model
+
+
+def _layer_kinds(cfg):
+    pat = cfg.pattern or ("rec", "rec", "attn")
+    return [pat[i % len(pat)] for i in range(cfg.n_layers)]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_rec_layer(cfg, key):
+    d, w = cfg.d_model, _lru_width(cfg)
+    ks = jax.random.split(key, 6)
+    p = {
+        "ln": L.init_rmsnorm(d)[0],
+        "w_gate": L.ninit(ks[0], (d, w)),
+        "w_rec": L.ninit(ks[1], (d, w)),
+        "conv_w": L.ninit(ks[2], (cfg.conv_width, w), scale=0.1),
+        "conv_b": L.zinit((w,)),
+        "wa": L.ninit(ks[3], (w, w)),      # recurrence gate r_t
+        "ba": L.zinit((w,)),
+        "wi": L.ninit(ks[4], (w, w)),      # input gate i_t
+        "bi": L.zinit((w,)),
+        "lam": jnp.asarray(np.linspace(0.9, 4.0, w), jnp.float32),
+        "wo": L.ninit(ks[5], (w, d)),
+    }
+    a = {
+        "ln": {"scale": ("embed",)},
+        "w_gate": ("embed", "mlp"), "w_rec": ("embed", "mlp"),
+        "conv_w": (None, "mlp"), "conv_b": ("mlp",),
+        "wa": ("mlp", "mlp2"), "ba": ("mlp",),
+        "wi": ("mlp", "mlp2"), "bi": ("mlp",),
+        "lam": ("mlp",), "wo": ("mlp", "embed"),
+    }
+    return p, a
+
+
+def init_attn_layer(cfg, key):
+    p, a = {}, {}
+    p["ln"], a["ln"] = L.init_rmsnorm(cfg.d_model)
+    p["attn"], a["attn"] = L.init_attention(key, attn_cfg(cfg))
+    return p, a
+
+
+def init_mlp_part(cfg, key):
+    p, a = {}, {}
+    p["ln"], a["ln"] = L.init_rmsnorm(cfg.d_model)
+    p["mlp"], a["mlp"] = L.init_glu_mlp(key, cfg.d_model, cfg.d_ff)
+    return p, a
+
+
+def init_rglru_model(cfg, key):
+    kinds = _layer_kinds(cfg)
+    n_rec = sum(k == "rec" for k in kinds)
+    n_att = max(sum(k == "attn" for k in kinds), 1)
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["embed"], a["embed"] = L.init_embedding(ks[0], cfg.vocab_padded, cfg.d_model)
+    p["rec"], a["rec"] = stack_layers(lambda k: init_rec_layer(cfg, k), n_rec, ks[1])
+    p["att"], a["att"] = stack_layers(lambda k: init_attn_layer(cfg, k), n_att, ks[2])
+    p["mlp"], a["mlp"] = stack_layers(lambda k: init_mlp_part(cfg, k),
+                                      cfg.n_layers, ks[3])
+    p["final_norm"], a["final_norm"] = L.init_rmsnorm(cfg.d_model)
+    return p, a
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU core
+# ---------------------------------------------------------------------------
+
+def rg_lru_scan(a, bx, h0=None):
+    """h_t = a_t * h_{t-1} + bx_t via associative scan over axis 1 (seq)."""
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def rec_block(cfg, lp, x, *, state=None, conv_buf=None):
+    """Griffin recurrent block.  Returns (out, new_state, new_conv_tail)."""
+    h = L.rmsnorm(lp["ln"], x)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h, lp["w_gate"].astype(h.dtype)))
+    u = jnp.einsum("bsd,dw->bsw", h, lp["w_rec"].astype(h.dtype))
+
+    cw = cfg.conv_width
+    if conv_buf is not None:
+        ctx = jnp.concatenate([conv_buf.astype(u.dtype), u], axis=1)
+    else:
+        ctx = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    conv = sum(ctx[:, j: j + u.shape[1]] * lp["conv_w"][cw - 1 - j].astype(u.dtype)
+               for j in range(cw))
+    conv = conv + lp["conv_b"].astype(u.dtype)
+    new_conv_tail = ctx[:, ctx.shape[1] - (cw - 1):]
+
+    cf = conv.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", cf,
+                                  lp["wa"].astype(jnp.float32)) + lp["ba"])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", cf,
+                                  lp["wi"].astype(jnp.float32)) + lp["bi"])
+    log_a = -C_RGLRU * jax.nn.softplus(lp["lam"]) * r    # <= 0
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bx = mult * (i * cf)
+
+    if x.shape[1] == 1 and state is not None:            # decode: one step
+        hs = (a[:, 0] * state + bx[:, 0])[:, None]
+    else:
+        hs = rg_lru_scan(a, bx, h0=state)
+    new_state = hs[:, -1]
+    out = jnp.einsum("bsw,wd->bsd", gate * hs.astype(gate.dtype),
+                     lp["wo"].astype(gate.dtype))
+    return out, new_state, new_conv_tail
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def forward(cfg, params, tokens, *, caches=None, cache_len=None,
+            collect=False, last_only=False, return_hidden=False):
+    """caches: decode-state dict (see init_cache) or None.
+    collect=True (prefill): build fresh caches from a full forward pass."""
+    kinds = _layer_kinds(cfg)
+    x = L.embed(params["embed"], tokens, dtype=cfg.act_dtype)
+    s = tokens.shape[1]
+    base = 0 if cache_len is None else cache_len
+    positions = base + jnp.arange(s, dtype=jnp.int32)
+    wnd = cfg.window or s
+
+    decode_mode = caches is not None
+    if decode_mode:
+        write_idx = cache_len % wnd
+        kv_pos = jax.lax.dynamic_update_slice(
+            caches["kv_pos"], cache_len[None].astype(jnp.int32), (write_idx,))
+    out_caches = {"kv_k": [], "kv_v": [], "state": [], "conv": []}
+
+    ri, ai = 0, 0
+    for li, kind in enumerate(kinds):
+        mlp_p = jax.tree.map(lambda v: v[li], params["mlp"])
+        if kind == "rec":
+            rec_p = jax.tree.map(lambda v: v[ri], params["rec"])
+            state = caches["state"][ri] if decode_mode else None
+            buf = caches["conv"][ri] if decode_mode else None
+
+            def rec_step(x, rec_p=rec_p, state=state, buf=buf):
+                return rec_block(cfg, rec_p, x, state=state, conv_buf=buf)
+
+            step = jax.checkpoint(rec_step) if cfg.remat else rec_step
+            o, new_state, new_buf = step(x)
+            x = x + o
+            out_caches["state"].append(new_state)
+            out_caches["conv"].append(new_buf)
+            ri += 1
+        else:
+            att_p = jax.tree.map(lambda v: v[ai], params["att"])
+
+            def att_step(x, att_p=att_p, ai=ai):
+                if decode_mode:
+                    kv = (caches["kv_k"][ai], caches["kv_v"][ai])
+                    return L.attention(att_p["attn"], attn_cfg(cfg),
+                                       L.rmsnorm(att_p["ln"], x), positions,
+                                       kv_cache=kv, cache_len=cache_len,
+                                       cache_write_idx=write_idx,
+                                       cache_positions=kv_pos,
+                                       q_block=cfg.q_block, kv_block=cfg.kv_block)
+                return L.attention(att_p["attn"], attn_cfg(cfg),
+                                   L.rmsnorm(att_p["ln"], x), positions,
+                                   q_block=cfg.q_block, kv_block=cfg.kv_block)
+
+            step = jax.checkpoint(att_step) if cfg.remat else att_step
+            o, new_kv = step(x)
+            x = x + o
+            if decode_mode:
+                out_caches["kv_k"].append(new_kv[0])
+                out_caches["kv_v"].append(new_kv[1])
+            elif collect:
+                # ring-buffer layout: slot = position % window
+                k, v = new_kv
+                take = min(wnd, s)
+                slots = (positions[-take:] % wnd)
+                kc = jnp.zeros((k.shape[0], wnd) + k.shape[2:], k.dtype)
+                vc = jnp.zeros_like(kc)
+                out_caches["kv_k"].append(kc.at[:, slots].set(k[:, -take:]))
+                out_caches["kv_v"].append(vc.at[:, slots].set(v[:, -take:]))
+            ai += 1
+
+        def mlp_step(x, mlp_p=mlp_p):
+            return x + L.glu_mlp(mlp_p["mlp"], L.rmsnorm(mlp_p["ln"], x),
+                                 cfg.mlp_kind)
+
+        step = jax.checkpoint(mlp_step) if cfg.remat else mlp_step
+        x = step(x)
+
+    if last_only:
+        x = x[:, -1:]
+    x = L.rmsnorm(params["final_norm"], x)
+    if return_hidden:
+        logits = x
+    else:
+        logits = L.unembed(params["embed"], x, cfg.vocab)
+
+    new_caches = None
+    if decode_mode or collect:
+        new_caches = {k: (jnp.stack(v) if v else jnp.zeros((0,)))
+                      for k, v in out_caches.items()}
+        if decode_mode:
+            new_caches["kv_pos"] = kv_pos
+        else:
+            take = min(wnd, s)
+            kvp = jnp.full((wnd,), 10 ** 9, jnp.int32)
+            new_caches["kv_pos"] = kvp.at[positions[-take:] % wnd].set(
+                positions[-take:])
+    return logits, new_caches
+
+
+def loss_fn(cfg, params, batch):
+    tokens = batch["tokens"]
+    hidden, _ = forward(cfg, params, tokens[:, :-1], return_hidden=True)
+    loss = L.chunked_unembed_xent(params["embed"], hidden, tokens[:, 1:],
+                                  cfg.vocab)
+    return loss, {"xent": loss}
+
+
+def init_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    kinds = _layer_kinds(cfg)
+    n_rec = sum(k == "rec" for k in kinds)
+    n_att = sum(k == "attn" for k in kinds)
+    w = _lru_width(cfg)
+    wnd = min(cfg.window or max_len, max_len)
+    caches = {
+        "kv_k": jnp.zeros((n_att, batch, wnd, cfg.n_kv, cfg.head_dim_), dtype),
+        "kv_v": jnp.zeros((n_att, batch, wnd, cfg.n_kv, cfg.head_dim_), dtype),
+        "state": jnp.zeros((n_rec, batch, w), jnp.float32),
+        "conv": jnp.zeros((n_rec, batch, cfg.conv_width - 1, w), dtype),
+        "kv_pos": jnp.full((wnd,), 10 ** 9, jnp.int32),
+    }
+    axes = {
+        "kv_k": ("layers", "batch", None, "kv_heads", "head_dim"),
+        "kv_v": ("layers", "batch", None, "kv_heads", "head_dim"),
+        "state": ("layers", "batch", "mlp"),
+        "conv": ("layers", "batch", None, "mlp"),
+        "kv_pos": (None,),
+    }
+    return caches, axes
+
+
+def prefill(cfg, params, tokens):
+    logits, caches = forward(cfg, params, tokens, collect=True, last_only=True)
+    return logits[:, -1], caches
+
+
+def decode_step(cfg, params, caches, tokens, cache_len):
+    logits, new_caches = forward(cfg, params, tokens, caches=caches,
+                                 cache_len=cache_len)
+    return logits[:, -1], new_caches

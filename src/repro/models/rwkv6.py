@@ -1,0 +1,297 @@
+"""RWKV-6 "Finch" (attention-free, data-dependent decay) [arXiv:2404.05892].
+
+Time-mix: token-shift ddlerp (5 streams r,k,v,w,g with a shared low-rank
+data-dependent adjustment), per-channel data-dependent decay
+w_t = exp(-exp(w0 + LoRA_w(x))) and bonus u; the WKV state recurrence
+
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T);   S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+is evaluated with a *chunked* parallel algorithm (log-space relative decays
+inside each chunk, lax.scan over chunks carrying S) for training/prefill and
+as an exact single step for decode.  Channel-mix: squared-relu MLP with
+receptance gate.  Decode state is O(1) per layer -- long_500k is runnable.
+
+The Pallas kernel (repro.kernels.wkv6) implements the same chunk recurrence;
+this module is the jnp reference path used on CPU and in the dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .transformer import stack_layers
+
+LORA_R = 32      # low-rank width of the ddlerp / decay adapters
+N_STREAMS = 5    # r, k, v, w, g
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(cfg, key):
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    h = d // cfg.head_size
+    p = {
+        "ln1": L.init_layernorm(d)[0],
+        "ln2": L.init_layernorm(d)[0],
+        # ddlerp token-shift mixing
+        "mu_x": L.zinit((d,)), "mu": L.zinit((N_STREAMS, d)),
+        "tm_w1": L.ninit(ks[0], (d, N_STREAMS * LORA_R), scale=0.01),
+        "tm_w2": L.ninit(ks[1], (N_STREAMS, LORA_R, d), scale=0.01),
+        # projections
+        "wr": L.ninit(ks[2], (d, d)), "wk": L.ninit(ks[3], (d, d)),
+        "wv": L.ninit(ks[4], (d, d)), "wg": L.ninit(ks[5], (d, d)),
+        "wo": L.ninit(ks[6], (d, d)),
+        # decay: w0 + lora
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "dw1": L.ninit(ks[7], (d, 64), scale=0.01),
+        "dw2": L.ninit(ks[8], (64, d), scale=0.01),
+        "u": L.ninit(ks[9], (h, cfg.head_size), scale=0.5),
+        "ln_x": jnp.ones((d,), jnp.float32),   # per-head group norm scale
+        # channel mix
+        "cm_mu_k": L.zinit((d,)), "cm_mu_r": L.zinit((d,)),
+        "cm_wk": L.ninit(ks[10], (d, cfg.d_ff)),
+        "cm_wv": L.ninit(ks[11], (cfg.d_ff, d)),
+        "cm_wr": L.ninit(ks[10], (d, d)),
+    }
+    a = {
+        "ln1": {"scale": ("embed",), "bias": ("embed",)},
+        "ln2": {"scale": ("embed",), "bias": ("embed",)},
+        "mu_x": ("embed",), "mu": (None, "embed"),
+        "tm_w1": ("embed", None), "tm_w2": (None, None, "embed"),
+        "wr": ("embed", "embed2"), "wk": ("embed", "embed2"),
+        "wv": ("embed", "embed2"), "wg": ("embed", "embed2"),
+        "wo": ("embed2", "embed"),
+        "w0": ("embed",), "dw1": ("embed", None), "dw2": (None, "embed"),
+        "u": ("heads", "head_dim"), "ln_x": ("embed",),
+        "cm_mu_k": ("embed",), "cm_mu_r": ("embed",),
+        "cm_wk": ("embed", "mlp"), "cm_wv": ("mlp", "embed"),
+        "cm_wr": ("embed", "embed2"),
+    }
+    return p, a
+
+
+def init_rwkv6_model(cfg, key):
+    k1, k2 = jax.random.split(key)
+    p, a = {}, {}
+    p["embed"], a["embed"] = L.init_embedding(k1, cfg.vocab_padded, cfg.d_model)
+    p["layers"], a["layers"] = stack_layers(lambda k: init_layer(cfg, k),
+                                            cfg.n_layers, k2)
+    p["final_norm"], a["final_norm"] = L.init_layernorm(cfg.d_model)
+    return p, a
+
+
+# ---------------------------------------------------------------------------
+# WKV6 chunk recurrence (jnp reference; see kernels/wkv6 for the Pallas twin)
+# ---------------------------------------------------------------------------
+
+def wkv6_chunked(r, k, v, logw, u, s0=None, chunk=64):
+    """r,k,v: (B,T,H,N); logw: (B,T,H,N) (log decay, <= 0); u: (H,N).
+    Returns (out (B,T,H,N), final state (B,H,N,N) [key x value dims])."""
+    b, t, h, n = r.shape
+    c = min(chunk, t)
+    t_pad = -(-t // c) * c
+    if t_pad != t:
+        pad = ((0, 0), (0, t_pad - t), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+        logw = jnp.pad(logw, pad)  # log w = 0 -> no decay on padding
+    nc = t_pad // c
+    rc = r.reshape(b, nc, c, h, n).transpose(1, 0, 3, 2, 4)   # (nc,B,H,C,N)
+    kc = k.reshape(b, nc, c, h, n).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nc, c, h, n).transpose(1, 0, 3, 2, 4)
+    wc = logw.reshape(b, nc, c, h, n).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+
+    s_init = jnp.zeros((b, h, n, n), jnp.float32) if s0 is None else s0
+    s_init = L.batch_hint(s_init)
+
+    def chunk_step(s, inp):
+        rr, kk, vv, lw = inp                      # (B,H,C,N)
+        rr32, kk32, vv32 = (x.astype(jnp.float32) for x in (rr, kk, vv))
+        lcum = jnp.cumsum(lw, axis=2)             # L_t (inclusive)
+        # intra-chunk: scores[t,i] = (r_t * exp(L_{t-1} - L_i)) . k_i, i < t
+        lprev = lcum - lw                         # L_{t-1}
+        # scores[t,i] = (r_t exp(L_{t-1} - L_i)) . k_i for i<t.  Shift both
+        # factors by the per-chunk max of -L so each exponent stays in
+        # [-range, range] where range = per-chunk cumulative log-decay.
+        # RWKV6's parametrization (logw = -exp(w0 + lora), w0 ~ -6) keeps
+        # range << 80 at chunk <= 128; the clamp is inert there and prevents
+        # inf*0 = NaN in the regime where the product underflows anyway.
+        mx = jnp.max(-lcum, axis=2, keepdims=True)
+        kd = kk32 * jnp.exp(jnp.clip(-lcum + mx, -85.0, 85.0))
+        rd = rr32 * jnp.exp(jnp.clip(lprev - mx, -85.0, 85.0))
+        scores = jnp.einsum("bhtn,bhin->bhti", rd, kd)
+        tri = jnp.tril(jnp.ones((c, c), bool), -1)
+        scores = jnp.where(tri[None, None], scores, 0.0)
+        diag = jnp.einsum("bhtn,hn,bhtn->bht", rr32, u.astype(jnp.float32), kk32)
+        o = jnp.einsum("bhti,bhin->bhtn", scores, vv32)
+        o = o + diag[..., None] * vv32
+        # inter-chunk: o += (r_t * exp(L_{t-1})) S
+        o = o + jnp.einsum("bhtn,bhnm->bhtm", rr32 * jnp.exp(lprev), s)
+        # state update: S' = diag(exp(L_C)) S + sum_i (k_i exp(L_C - L_i)) v_i^T
+        lc = lcum[:, :, -1:, :]                   # (B,H,1,N)
+        s_new = jnp.exp(lc.squeeze(2))[..., None] * s + jnp.einsum(
+            "bhin,bhim->bhnm", kk32 * jnp.exp(lc - lcum), vv32)
+        return s_new, o
+
+    s_fin, outs = jax.lax.scan(chunk_step, s_init, (rc, kc, vc, wc))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, t_pad, h, n)[:, :t]
+    return out.astype(r.dtype), s_fin
+
+
+def wkv6_step(r, k, v, logw, u, s):
+    """Single-token exact recurrence.  r,k,v,logw: (B,H,N); s: (B,H,N,N)."""
+    r32, k32, v32 = (x.astype(jnp.float32) for x in (r, k, v))
+    kv = jnp.einsum("bhn,bhm->bhnm", k32, v32)
+    o = jnp.einsum("bhn,bhnm->bhm", r32, s + u.astype(jnp.float32)[..., None] * kv)
+    s_new = jnp.exp(logw.astype(jnp.float32))[..., None] * s + kv
+    return o.astype(r.dtype), s_new
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _ddlerp(p, x, sx):
+    """5-stream token-shift mixing.  x, sx: (B,S,d) -> tuple of 5 mixed."""
+    base = x + sx * p["mu_x"].astype(x.dtype)
+    lora = jnp.einsum("bsd,dr->bsr", jnp.tanh(base), p["tm_w1"].astype(x.dtype))
+    lora = lora.reshape(*lora.shape[:-1], N_STREAMS, LORA_R)
+    adj = jnp.einsum("bszr,zrd->bszd", lora, p["tm_w2"].astype(x.dtype))
+    mixed = x[..., None, :] + sx[..., None, :] * (p["mu"].astype(x.dtype) + adj)
+    return [mixed[..., i, :] for i in range(N_STREAMS)]
+
+
+def time_mix(cfg, p, x, *, state=None, last=None):
+    """state: (B,H,N,N) wkv state; last: (B,d) previous token (decode).
+    Returns (out, new_state, new_last)."""
+    b, s, d = x.shape
+    h, n = cfg.n_heads, cfg.head_size
+    xn = L.layernorm(p["ln1"], x)
+    if s == 1 and last is not None:
+        prev = last[:, None, :].astype(xn.dtype)
+    else:
+        prev = jnp.pad(xn, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        if last is not None:
+            prev = prev.at[:, 0].set(last.astype(xn.dtype))
+    sx = prev - xn
+    xr, xk, xv, xw, xg = _ddlerp(p, xn, sx)
+
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(x.dtype))
+    g = jnp.einsum("bsd,de->bse", xg, p["wg"].astype(x.dtype))
+    dlora = jnp.einsum("bsd,dr->bsr", jnp.tanh(xw.astype(jnp.float32)),
+                       p["dw1"].astype(jnp.float32))
+    logw = -jnp.exp(p["w0"] + jnp.einsum("bsr,rd->bsd", dlora,
+                                         p["dw2"].astype(jnp.float32)))
+    rh = r.reshape(b, s, h, n)
+    kh = k.reshape(b, s, h, n)
+    vh = v.reshape(b, s, h, n)
+    wh = logw.reshape(b, s, h, n)
+
+    if s == 1 and state is not None:
+        o, new_state = wkv6_step(rh[:, 0], kh[:, 0], vh[:, 0], wh[:, 0],
+                                 p["u"], state)
+        o = o[:, None]
+    else:
+        o, new_state = wkv6_chunked(rh, kh, vh, wh, p["u"], s0=state)
+    # per-head group norm then gate
+    o = o.reshape(b, s, h, n)
+    o32 = o.astype(jnp.float32)
+    o32 = o32 * jax.lax.rsqrt(jnp.mean(o32 * o32, axis=-1, keepdims=True) + 1e-6)
+    o = (o32.reshape(b, s, d) * p["ln_x"]).astype(x.dtype)
+    o = o * jax.nn.silu(g)
+    out = jnp.einsum("bsd,de->bse", o, p["wo"].astype(x.dtype))
+    return out, new_state, xn[:, -1]
+
+
+def channel_mix(p, x, *, last=None):
+    xn = L.layernorm(p["ln2"], x)
+    if x.shape[1] == 1 and last is not None:
+        prev = last[:, None, :].astype(xn.dtype)
+    else:
+        prev = jnp.pad(xn, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        if last is not None:
+            prev = prev.at[:, 0].set(last.astype(xn.dtype))
+    sx = prev - xn
+    xk = xn + sx * p["cm_mu_k"].astype(x.dtype)
+    xr = xn + sx * p["cm_mu_r"].astype(x.dtype)
+    hidden = jnp.einsum("bsd,df->bsf", xk, p["cm_wk"].astype(x.dtype))
+    hidden = jnp.square(jax.nn.relu(hidden))
+    out = jnp.einsum("bsf,fd->bsd", hidden, p["cm_wv"].astype(x.dtype))
+    rgate = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr,
+                                      p["cm_wr"].astype(x.dtype)))
+    return rgate * out, xn[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def forward(cfg, params, tokens, *, caches=None, last_only=False,
+            return_hidden=False):
+    x = L.embed(params["embed"], tokens, dtype=cfg.act_dtype)
+    decode_mode = caches is not None
+
+    def body(carry, xs):
+        hcur = carry
+        lp = xs["lp"]
+        st = xs.get("state") if decode_mode else None
+        l1 = xs.get("last_tm") if decode_mode else None
+        l2 = xs.get("last_cm") if decode_mode else None
+        o, new_state, new_l1 = time_mix(cfg, lp, hcur, state=st, last=l1)
+        hcur = hcur + o
+        o2, new_l2 = channel_mix(lp, hcur, last=l2)
+        hcur = hcur + o2
+        ys = {"state": new_state, "last_tm": new_l1, "last_cm": new_l2}
+        return hcur, ys
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    xs = {"lp": params["layers"]}
+    if decode_mode:
+        xs.update(caches)
+    x, ys = jax.lax.scan(body_fn, x, xs)
+    if last_only:
+        x = x[:, -1:]
+    x = L.layernorm(params["final_norm"], x)
+    if return_hidden:
+        return x, ys
+    logits = L.unembed(params["embed"], x, cfg.vocab)
+    return logits, ys
+
+
+def loss_fn(cfg, params, batch):
+    tokens = batch["tokens"]
+    hidden, _ = forward(cfg, params, tokens[:, :-1], return_hidden=True)
+    loss = L.chunked_unembed_xent(params["embed"], hidden, tokens[:, 1:],
+                                  cfg.vocab)
+    return loss, {"xent": loss}
+
+
+def init_cache(cfg, batch, max_len=None, dtype=jnp.bfloat16):
+    h, n, d = cfg.n_heads, cfg.head_size, cfg.d_model
+    caches = {
+        "state": jnp.zeros((cfg.n_layers, batch, h, n, n), jnp.float32),
+        "last_tm": jnp.zeros((cfg.n_layers, batch, d), jnp.float32),
+        "last_cm": jnp.zeros((cfg.n_layers, batch, d), jnp.float32),
+    }
+    axes = {
+        "state": ("layers", "batch", "heads", None, None),
+        "last_tm": ("layers", "batch", "embed"),
+        "last_cm": ("layers", "batch", "embed"),
+    }
+    return caches, axes
+
+
+def prefill(cfg, params, tokens):
+    logits, ys = forward(cfg, params, tokens, caches=None, last_only=True)
+    # states collected by scan even in train mode (ys carries them)
+    return logits[:, -1], ys
+
+
+def decode_step(cfg, params, caches, tokens, cache_len=None):
+    logits, new_caches = forward(cfg, params, tokens, caches=caches)
+    return logits[:, -1], new_caches

@@ -1,0 +1,158 @@
+"""Decoder-only transformer LM (llama/qwen/mistral/smollm/olmoe families).
+
+Layers are parameter-stacked and iterated with ``lax.scan`` (one-layer HLO +
+loop: fast compiles at 24-40 layers, standard for large-model JAX).  Blocks
+are pre-norm GQA attention + (dense GLU MLP | MoE).  Supports KV-cache decode
+and optional per-layer remat.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .moe import MoECfg, init_moe, moe_layer
+
+
+def attn_cfg(cfg) -> L.AttnCfg:
+    return L.AttnCfg(d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                     head_dim=cfg.head_dim_, qkv_bias=cfg.qkv_bias,
+                     qk_norm=cfg.qk_norm, window=cfg.window,
+                     rope_theta=cfg.rope_theta)
+
+
+def moe_cfg(cfg) -> MoECfg:
+    return MoECfg(d_model=cfg.d_model, n_experts=cfg.n_experts,
+                  n_experts_padded=cfg.n_experts_padded, top_k=cfg.top_k,
+                  d_expert=cfg.d_expert, n_shared=cfg.n_shared,
+                  group_size=cfg.moe_group_size,
+                  capacity_factor=cfg.moe_capacity_factor)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(cfg, key):
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["ln1"], a["ln1"] = L.init_rmsnorm(cfg.d_model)
+    p["attn"], a["attn"] = L.init_attention(ks[0], attn_cfg(cfg))
+    p["ln2"], a["ln2"] = L.init_rmsnorm(cfg.d_model)
+    if cfg.is_moe:
+        p["moe"], a["moe"] = init_moe(ks[1], moe_cfg(cfg))
+    else:
+        p["mlp"], a["mlp"] = L.init_glu_mlp(ks[1], cfg.d_model, cfg.d_ff)
+    return p, a
+
+
+def stack_layers(init_one, n_layers, key):
+    """vmap the single-layer init over per-layer keys -> leading 'layers' dim."""
+    keys = jax.random.split(key, n_layers)
+    _, axes = init_one(jax.random.PRNGKey(0))
+    params = jax.vmap(lambda k: init_one(k)[0])(keys)
+    axes = jax.tree.map(lambda ax: ("layers",) + tuple(ax), axes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return params, axes
+
+
+def init_lm(cfg, key):
+    k_emb, k_layers = jax.random.split(key)
+    p, a = {}, {}
+    p["embed"], a["embed"] = L.init_embedding(k_emb, cfg.vocab_padded, cfg.d_model)
+    p["layers"], a["layers"] = stack_layers(lambda k: init_layer(cfg, k),
+                                            cfg.n_layers, k_layers)
+    p["final_norm"], a["final_norm"] = L.init_rmsnorm(cfg.d_model)
+    return p, a
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _block(cfg, lp, x, positions, kv_cache=None, cache_len=None):
+    x = L.seq_hint(x)   # residual stream sequence-sharded between layers
+    h, new_cache = L.attention(lp["attn"], attn_cfg(cfg), L.rmsnorm(lp["ln1"], x),
+                               positions, kv_cache=kv_cache, cache_len=cache_len,
+                               q_block=cfg.q_block, kv_block=cfg.kv_block)
+    x = x + h
+    h2 = L.rmsnorm(lp["ln2"], x)
+    if cfg.is_moe:
+        out, aux = moe_layer(lp["moe"], moe_cfg(cfg), h2)
+        if cfg.moe_seq_shard_out:
+            # seq-shard the combine output: turns the EP partial-sum
+            # all-reduce over "model" into a reduce-scatter (the residual
+            # stream is already sequence-sharded)  [§Perf hillclimb 2]
+            out = L.seq_hint(out)
+    else:
+        out, aux = L.glu_mlp(lp["mlp"], h2, cfg.mlp_kind), {}
+    return x + out, new_cache, aux
+
+
+def forward(cfg, params, tokens, *, cache=None, cache_len=None,
+            last_only=False, return_hidden=False):
+    """tokens: (B, S) int32.  cache: optional stacked (L, B, Smax, kv, hd) x2.
+    last_only: emit logits for the final position only (prefill).
+    Returns (logits, new_cache, aux)."""
+    x = L.embed(params["embed"], tokens, dtype=cfg.act_dtype)
+    s = tokens.shape[1]
+    base = 0 if cache_len is None else cache_len
+    positions = base + jnp.arange(s, dtype=jnp.int32)
+
+    def body(carry, xs):
+        h = carry
+        lp = xs["lp"]
+        kv = (xs["k"], xs["v"]) if cache is not None else None
+        h, new_kv, aux = _block(cfg, lp, h, positions, kv_cache=kv,
+                                cache_len=cache_len)
+        ys = {"aux": aux}
+        if cache is not None:
+            ys["k"], ys["v"] = new_kv
+        return h, ys
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    xs = {"lp": params["layers"]}
+    if cache is not None:
+        xs["k"], xs["v"] = cache
+    x, ys = jax.lax.scan(body_fn, x, xs)
+    if last_only:
+        x = x[:, -1:]
+    x = L.rmsnorm(params["final_norm"], x)
+    new_cache = (ys["k"], ys["v"]) if cache is not None else None
+    aux = {k: v.mean() for k, v in ys["aux"].items()}
+    if return_hidden:
+        return x, new_cache, aux
+    logits = L.unembed(params["embed"], x, cfg.vocab)
+    return logits, new_cache, aux
+
+
+def loss_fn(cfg, params, batch):
+    tokens = batch["tokens"]
+    hidden, _, aux = forward(cfg, params, tokens[:, :-1], return_hidden=True)
+    loss = L.chunked_unembed_xent(params["embed"], hidden, tokens[:, 1:],
+                                  cfg.vocab)
+    for k, v in aux.items():
+        loss = loss + cfg.aux_loss_weight * v
+    return loss, {"xent": loss, **aux}
+
+
+def init_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.head_dim_)
+    axes = ("layers", "batch", None, "kv_heads", "head_dim")
+    return ((jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)),
+            (axes, axes))
+
+
+def decode_step(cfg, params, cache, tokens, cache_len):
+    """One-token decode: tokens (B, 1)."""
+    logits, new_cache, _ = forward(cfg, params, tokens, cache=cache,
+                                   cache_len=cache_len)
+    return logits[:, -1], new_cache
+
+
+def prefill(cfg, params, tokens, max_len):
+    """Prefill: run forward while writing the cache; returns last logits."""
+    cache, _ = init_cache(cfg, tokens.shape[0], max_len)
+    logits, new_cache, _ = forward(cfg, params, tokens, cache=cache,
+                                   cache_len=0, last_only=True)
+    return logits[:, -1], new_cache

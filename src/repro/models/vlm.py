@@ -1,0 +1,75 @@
+"""InternVL2-2B backbone: InternViT frontend STUB (precomputed patch
+embeddings) projected and prepended to the InternLM2 token stream; loss on
+text positions only.  Decode reuses the LM KV-cache path (image prefix lives
+in the cache after prefill)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import transformer as T
+
+
+def init_vlm(cfg, key):
+    k1, k2 = jax.random.split(key)
+    p, a = T.init_lm(cfg, k1)
+    p["patch_proj"] = {"w": L.ninit(k2, (cfg.d_model, cfg.d_model))}
+    a["patch_proj"] = {"w": ("embed", "embed2")}
+    return p, a
+
+
+def forward(cfg, params, tokens, patches, *, cache=None, cache_len=None,
+            last_only=False, return_hidden=False):
+    """patches: (B, n_img, d) stub embeddings; tokens: (B, S_text)."""
+    tok_emb = L.embed(params["embed"], tokens, dtype=cfg.act_dtype)
+    img_emb = jnp.einsum("bnd,de->bne", patches.astype(cfg.act_dtype),
+                         params["patch_proj"]["w"].astype(cfg.act_dtype))
+    x = jnp.concatenate([img_emb, tok_emb], axis=1)
+    s = x.shape[1]
+    base = 0 if cache_len is None else cache_len
+    positions = base + jnp.arange(s, dtype=jnp.int32)
+
+    def body(carry, xs):
+        h = carry
+        kv = (xs["k"], xs["v"]) if cache is not None else None
+        h, new_kv, _ = T._block(cfg, xs["lp"], h, positions, kv_cache=kv,
+                                cache_len=cache_len)
+        ys = {}
+        if cache is not None:
+            ys["k"], ys["v"] = new_kv
+        return h, ys
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    xs = {"lp": params["layers"]}
+    if cache is not None:
+        xs["k"], xs["v"] = cache
+    x, ys = jax.lax.scan(body_fn, x, xs)
+    if last_only:
+        x = x[:, -1:]
+    x = L.rmsnorm(params["final_norm"], x)
+    new_cache = (ys["k"], ys["v"]) if cache is not None else None
+    if return_hidden:
+        return x, new_cache
+    logits = L.unembed(params["embed"], x, cfg.vocab)
+    return logits, new_cache
+
+
+def loss_fn(cfg, params, batch):
+    tokens, patches = batch["tokens"], batch["patches"]
+    hidden, _ = forward(cfg, params, tokens[:, :-1], patches,
+                        return_hidden=True)
+    n_img = patches.shape[1]
+    loss = L.chunked_unembed_xent(params["embed"], hidden[:, n_img:],
+                                  tokens[:, 1:], cfg.vocab)
+    return loss, {"xent": loss}
+
+
+init_cache = T.init_cache
+
+
+def decode_step(cfg, params, cache, tokens, cache_len):
+    """Image prefix already in cache from prefill; pure-text decode."""
+    logits, new_cache, _ = T.forward(cfg, params, tokens, cache=cache,
+                                     cache_len=cache_len)
+    return logits[:, -1], new_cache

@@ -1,0 +1,91 @@
+"""Loop-aware HLO analyzer: exactness fixtures (scan trip counts, nested
+loops, DUS in-place accounting) + roofline term wiring."""
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo import analyze_hlo
+from repro.analysis.roofline import model_flops_for, roofline
+from repro import configs
+
+
+def test_scan_flops_exact():
+    def g(x):
+        def body(c, _):
+            return c @ x, None
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out.sum()
+    xs = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    st = analyze_hlo(jax.jit(g).lower(xs).compile().as_text())
+    assert st.dot_flops == 2 * 128 ** 3 * 10
+
+
+def test_nested_scan_flops_exact():
+    def h(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ x, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out.sum()
+    xs = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    st = analyze_hlo(jax.jit(h).lower(xs).compile().as_text())
+    assert st.dot_flops == 2 * 128 ** 3 * 15
+
+
+def test_trip_count_ignores_body_constants():
+    def g(x):
+        def body(c, _):
+            return c @ x + 32768.0, None   # big constant in the body
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out.sum()
+    xs = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    st = analyze_hlo(jax.jit(g).lower(xs).compile().as_text())
+    assert st.dot_flops == 2 * 64 ** 3 * 10
+
+
+def test_dus_loop_not_overcounted():
+    def h(buf, upd):
+        def body(b, i):
+            return jax.lax.dynamic_update_slice_in_dim(b, upd, i, 0), None
+        out, _ = jax.lax.scan(body, buf, jnp.arange(50))
+        return out
+    c = jax.jit(h).lower(jax.ShapeDtypeStruct((100000, 64), jnp.float32),
+                         jax.ShapeDtypeStruct((1, 64), jnp.float32)).compile()
+    st = analyze_hlo(c.as_text())
+    overcount = 100000 * 64 * 4 * 50          # full buffer x iterations
+    assert st.bytes_touched < 0.2 * overcount
+
+
+def test_collectives_counted_in_loops():
+    import os
+    # single-device: no collectives; just assert the field plumbing
+    def g(x):
+        return x * 2
+    st = analyze_hlo(jax.jit(g).lower(
+        jax.ShapeDtypeStruct((8,), jnp.float32)).compile().as_text())
+    assert st.total_collective_bytes == 0
+
+
+def test_roofline_terms():
+    cfg = configs.get("qwen3-8b")
+    shape = cfg.shape("train_4k")
+    t = roofline(cfg, shape, "16x16", 256, 1e15, 1e12, 1e10)
+    assert t.compute_s > 0 and t.memory_s > 0 and t.collective_s > 0
+    assert t.dominant == "compute"
+    assert 0 < t.roofline_fraction <= 1.5
+
+
+def test_model_flops_includes_attention():
+    cfg = configs.get("smollm-135m")
+    short = model_flops_for(cfg, cfg.shape("train_4k"), 256)
+    # prefill at 32k has much higher per-token flops due to attention
+    long_ = model_flops_for(cfg, cfg.shape("prefill_32k"), 256)
+    per_tok_short = short / (256 * 4096 / 256)
+    per_tok_long = long_ / (32 * 32768 / 256)
+    assert per_tok_long > per_tok_short  # attention term grows with S
+    # rwkv6 has no attention quadratic term
+    r = configs.get("rwkv6-7b")
+    a = model_flops_for(r, r.shape("prefill_32k"), 256) / (32 * 32768 / 256)
+    b = model_flops_for(r, r.shape("train_4k"), 256) / (256 * 4096 / 256)
+    assert abs(a * 3 - b) / b < 0.01   # 2ND vs 6ND only

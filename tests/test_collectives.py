@@ -1,0 +1,108 @@
+"""Allreduce schedules, simulator, cost model, fault tolerance."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CostModel, FailureEvent, FaultTolerantAllreduce,
+                        allreduce_schedule, rebalance_chunks,
+                        simulate_allreduce, star_edsts)
+from repro.core import topologies as topo
+
+
+@pytest.fixture(scope="module")
+def pod_sched():
+    sp = topo.device_topology((16, 16))
+    res = star_edsts(sp)
+    return sp, allreduce_schedule(sp.n, res.trees)
+
+
+def test_schedule_contention_free(pod_sched):
+    _, sched = pod_sched
+    assert sched.check_contention_free()
+
+
+def test_simulated_allreduce_correct(pod_sched):
+    sp, sched = pod_sched
+    vals = np.random.RandomState(0).randn(sp.n, 8 * sched.k)
+    sim = simulate_allreduce(sched, vals)
+    assert sim.ok
+    assert sim.max_link_load == 1  # EDST property: no link carries 2 msgs
+
+
+@settings(max_examples=8, deadline=None)
+@given(dims=st.sampled_from([(4, 4), (2, 8), (8, 8), (2, 4, 4)]),
+       seed=st.integers(0, 100))
+def test_allreduce_on_any_torus(dims, seed):
+    sp = topo.device_topology(dims)
+    res = star_edsts(sp)
+    sched = allreduce_schedule(sp.n, res.trees)
+    vals = np.random.RandomState(seed).randn(sp.n, 4 * sched.k)
+    assert simulate_allreduce(sched, vals).ok
+
+
+def test_cost_model_k_trees_beat_ring(pod_sched):
+    sp, sched = pod_sched
+    cm = CostModel()
+    b = 64 * 2 ** 20
+    assert cm.edst_tree_allreduce(b, sched) < cm.ring_allreduce(b, sp.n)
+    # in-network mode halves the endpoint traversal
+    assert cm.edst_tree_allreduce(b, sched, in_network=True) < \
+        cm.edst_tree_allreduce(b, sched)
+
+
+def test_link_failure_degrade_and_rebuild(pod_sched):
+    sp, sched = pod_sched
+    g = sp.product()
+    fta = FaultTolerantAllreduce(g, sched)
+    dead = next(iter(sched.trees[0].tree))
+    fta2 = fta.on_failure(FailureEvent(links=frozenset({dead})))
+    assert fta2.k == sched.k - 1
+    vals = np.random.RandomState(1).randn(g.n, 8)
+    assert simulate_allreduce(fta2.schedule, vals).ok
+    fta3 = fta2.rebuild()
+    assert fta3.k == sched.k
+    assert simulate_allreduce(fta3.schedule, vals).ok
+
+
+def test_node_failure_rebuild(pod_sched):
+    sp, sched = pod_sched
+    g = sp.product()
+    fta = FaultTolerantAllreduce(g, sched).on_failure(
+        FailureEvent(nodes=frozenset({7})))
+    assert fta.graph.n == g.n - 1
+    vals = np.random.RandomState(2).randn(fta.graph.n, 8 * fta.k)
+    assert simulate_allreduce(fta.schedule, vals).ok
+
+
+def test_straggler_rebalance(pod_sched):
+    _, sched = pod_sched
+    fracs = rebalance_chunks(sched, {5: 3.0})
+    assert abs(sum(fracs) - 1.0) < 1e-9
+    assert all(f >= 0 for f in fracs)
+
+
+@settings(max_examples=6, deadline=None)
+@given(n_fail=st.integers(1, 3), seed=st.integers(0, 1000))
+def test_random_link_failures_property(n_fail, seed):
+    """Property: after ANY set of random link failures that keeps >= 1 tree
+    intact, the degraded schedule still computes exact sums; after rebuild,
+    tree count equals the residual fabric's maximum packing."""
+    import random
+    from repro.core import topologies as topo
+    sp = topo.device_topology((4, 4))
+    g = sp.product()
+    res = star_edsts(sp)
+    sched = allreduce_schedule(g.n, res.trees)
+    rng = random.Random(seed)
+    # fail links from one tree only (keeps the other intact)
+    tree0 = sorted(sched.trees[0].tree)
+    dead = frozenset(rng.sample(tree0, min(n_fail, len(tree0))))
+    fta = FaultTolerantAllreduce(g, sched).on_failure(FailureEvent(links=dead))
+    vals = np.random.RandomState(seed).randn(g.n, 4 * fta.k)
+    assert simulate_allreduce(fta.schedule, vals).ok
+    rebuilt = fta.rebuild()
+    vals2 = np.random.RandomState(seed + 1).randn(g.n, 4 * rebuilt.k)
+    assert simulate_allreduce(rebuilt.schedule, vals2).ok
+    from repro.core.edst_rt import max_edsts
+    trees, _ = max_edsts(fta.graph)
+    assert rebuilt.k == max(len(trees), fta.k)

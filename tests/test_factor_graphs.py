@@ -1,0 +1,87 @@
+"""Factor graphs vs paper Table 4: vertex/edge counts and (t, r) from the
+EDST constructions (explicit or Roskind-Tarjan)."""
+import pytest
+
+from repro.core import factor_graphs as fg
+from repro.core.factor_edsts import complete_graph_edsts, edsts_for
+from repro.core.gf import gf
+
+
+@pytest.mark.parametrize("q", [2, 3, 4, 5, 7, 8, 9, 11, 13, 16, 17, 25])
+def test_gf_field_axioms(q):
+    F = gf(q)
+    for a in range(1, q):
+        assert F.mul(a, F.inv(a)) == 1
+        assert F.add(a, F.neg(a)) == 0
+    # primitive element generates the multiplicative group
+    seen, x = set(), 1
+    for _ in range(q - 1):
+        x = F.mul(x, F.primitive)
+        seen.add(x)
+    assert len(seen) == q - 1
+
+
+@pytest.mark.parametrize("m", [4, 5, 6, 7, 8, 9, 10, 11, 12])
+def test_complete_graph_walecki(m):
+    E = complete_graph_edsts(fg.complete(m))
+    assert E.t == m // 2
+    assert E.r == (0 if m % 2 == 0 else (m - 1) // 2)
+
+
+@pytest.mark.parametrize("q,k", [(5, 1), (13, 3), (17, 4)])
+def test_paley_t_r(q, k):
+    E = edsts_for(fg.paley(q))
+    assert (E.t, E.r) == (k, k)
+
+
+@pytest.mark.parametrize("q,t,r", [
+    (3, 1, 4), (4, 2, 2), (5, 2, 7), (7, 3, 10), (8, 4, 4)])
+def test_bipartite_t_r(q, t, r):
+    E = edsts_for(fg.complete_bipartite(q))
+    assert (E.t, E.r) == (t, r)
+
+
+@pytest.mark.parametrize("q,k", [(5, 1), (4, 1), (7, 2), (8, 2), (13, 3)])
+def test_mms_supernode_t_r(q, k):
+    g = fg.mms_supernode(q)
+    exp_e = {1: q * (q - 1) // 4, 0: q * q // 4, 3: q * (q + 1) // 4}[q % 4]
+    assert g.m == exp_e
+    E = edsts_for(g)
+    assert (E.t, E.r) == (k, k)
+
+
+@pytest.mark.parametrize("q", [2, 3, 4, 5])
+def test_erdos_renyi_t_r(q):
+    g = fg.erdos_renyi_polarity(q)
+    assert (g.n, g.m) == (q * q + q + 1, q * (q + 1) ** 2 // 2)
+    E = edsts_for(g)
+    if q % 2:
+        assert (E.t, E.r) == ((q + 1) // 2, 0)
+    else:
+        assert (E.t, E.r) == (q // 2, q * (q + 1) // 2)
+
+
+@pytest.mark.parametrize("d", [4, 8, 3, 7])
+def test_inductive_quad_t_r(d):
+    E = edsts_for(fg.inductive_quad(d))
+    if d % 4 == 0:
+        assert (E.t, E.r) == (d // 2, d // 2)
+    else:
+        assert (E.t, E.r) == ((d - 1) // 2, (3 * d + 1) // 2)
+
+
+@pytest.mark.parametrize("d", [3, 4, 5, 6])
+def test_bdf_t_r(d):
+    g = fg.bdf(d)
+    assert (g.n, g.m) == (2 * d, d * d)
+    E = edsts_for(g)
+    assert E.t == d // 2
+
+
+def test_mms_graph_diameter_2():
+    """The searched connection sets must produce true MMS graphs."""
+    from repro.core.topologies import slimfly
+    for q in (4, 5, 7):
+        g = slimfly(q).product()
+        assert g.n == 2 * q * q
+        assert g.diameter() == 2
