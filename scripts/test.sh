@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 test runner: sets PYTHONPATH=src and runs the full suite.
+#
+#   scripts/test.sh                 # full tier-1 suite
+#   scripts/test.sh -m "not slow"   # fast unit tier (no subprocess
+#                                   # multi-device tests)
+#   scripts/test.sh tests/test_system.py -k ckpt   # any pytest args
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -q "$@"

@@ -87,9 +87,13 @@ def _parse_computations(text: str) -> dict:
 
 
 def _dot_flops(line: str, symbols: dict) -> float:
-    """2 * prod(out dims) * prod(contracting dims) for dot ops.  Operand
-    shapes are resolved via ``symbols`` (name -> dims list) because optimized
-    HLO references operands by name only."""
+    """2 * prod(out dims) * prod(contracting dims) for dot ops.
+
+    Optimized HLO may reference operands either by bare name
+    (``dot(%p.1, %p.2)``) or with an inline shape
+    (``dot(f32[128,128]{1,0} %p.1, ...)``).  The lhs dims come from the
+    inline shape when present (naive comma-splitting would cut the shape's
+    own commas), falling back to the ``symbols`` table (name -> dims)."""
     m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)", line)
     if not m:
         return 0.0
@@ -107,8 +111,14 @@ def _dot_flops(line: str, symbols: dict) -> float:
     contract = 1
     opm = re.search(r"dot\(([^)]*)\)", rhs)
     if cm and opm:
-        names = [a.strip().lstrip("%") for a in opm.group(1).split(",")]
-        lhs_dims = symbols.get(names[0]) if names else None
+        inner = opm.group(1)
+        lhs_dims = None
+        shapes = _SHAPE_RE.findall(inner)
+        if shapes:   # inline operand shapes: the first is the lhs
+            lhs_dims = [int(d) for d in shapes[0][1].split(",") if d]
+        else:        # bare names: resolve the first operand via symbols
+            first = inner.split(",")[0].strip().lstrip("%")
+            lhs_dims = symbols.get(first)
         if lhs_dims is not None:
             for idx in cm.group(1).split(","):
                 if idx and int(idx) < len(lhs_dims):
@@ -211,8 +221,9 @@ def _trip_count(cond_lines: list) -> int:
     for line in cond_lines:
         cm = re.search(r"(?:compare|fusion)\(([^)]*)\)", line)
         if cm and ("ROOT" in line or "compare" in line):
-            for op in cm.group(1).split(","):
-                name = op.strip().lstrip("%")
+            # operands may carry inline shapes ("s32[] %constant.23"): take
+            # the trailing name token of each operand
+            for name in re.findall(r"%?([\w.\-]+)(?:\s*[,)]|$)", cm.group(1)):
                 if name in consts:
                     return consts[name]
     return max(consts.values(), default=1)

@@ -1,0 +1,25 @@
+"""Distributed execution on EDST fabrics.
+
+Four modules wire the paper's edge-disjoint-spanning-tree constructions
+(:mod:`repro.core`) into runnable JAX:
+
+  * :mod:`repro.dist.sharding`       -- logical axis names -> PartitionSpecs
+    (tensor-parallel priority rules + FSDP on the largest divisible dim);
+  * :mod:`repro.dist.tree_allreduce` -- the k-tree allreduce executed with
+    ``ppermute`` under ``shard_map``, gradient chunks striped across the
+    edge-disjoint trees;
+  * :mod:`repro.dist.steps`          -- sharded train steps with selectable
+    gradient sync (gspmd | psum_dp | edst) and the mesh -> star-product
+    decomposition chooser;
+  * :mod:`repro.dist.pipeline`       -- GPipe microbatch schedule over a
+    'stage' mesh axis.
+
+See README.md in this directory for the data flow.
+"""
+from . import compat as _compat
+
+_compat.install()
+
+from . import pipeline, sharding, steps, tree_allreduce  # noqa: E402
+
+__all__ = ["sharding", "steps", "tree_allreduce", "pipeline"]

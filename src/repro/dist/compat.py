@@ -1,0 +1,82 @@
+"""JAX API compatibility layer.
+
+The distributed layer (and its tests) is written against the current JAX
+surface: ``jax.shard_map(..., axis_names=..., check_vma=...)`` and
+``jax.set_mesh(mesh)``.  Older jaxlibs (this container ships 0.4.x) spell
+these ``jax.experimental.shard_map.shard_map(..., auto=..., check_rep=...)``
+and activate a mesh with the ``with mesh:`` resource context.  This module
+provides version-agnostic wrappers and, on import of :mod:`repro.dist`,
+installs them onto ``jax`` when the new names are missing -- so driver
+scripts and test snippets run unchanged on either version.
+
+No behaviour is patched when the running JAX already has the new API.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=None, check_rep=None, **kw):
+    """Version-agnostic ``shard_map``.
+
+    ``axis_names`` -- the set of mesh axes that are Manual inside ``f``
+    (everything else stays Auto/GSPMD); maps to ``auto=`` on old JAX.
+    ``check_vma`` (new) / ``check_rep`` (old) -- replication checking.
+    """
+    check = check_vma if check_vma is not None else check_rep
+    native = getattr(jax, "shard_map", None)
+    if native is not None and native is not _compat_shard_map:
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        if check is not None:
+            kw["check_vma"] = check
+        return native(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    if check is not None:
+        kw["check_rep"] = check
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def _compat_shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                      check_vma=None, check_rep=None, **kw):
+    """Installed as ``jax.shard_map`` on old JAX: translate new-API kwargs
+    down to ``jax.experimental.shard_map.shard_map``."""
+    from jax.experimental.shard_map import shard_map as _sm
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    check = check_vma if check_vma is not None else check_rep
+    if check is not None:
+        kw["check_rep"] = check
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def set_mesh(mesh):
+    """Version-agnostic mesh activation: usable as ``with set_mesh(mesh):``.
+
+    New JAX has ``jax.set_mesh``; on old JAX a concrete ``Mesh`` is itself
+    the resource-env context manager, so we just hand it back.
+    """
+    native = getattr(jax, "set_mesh", None)
+    if native is not None and native is not _compat_set_mesh:
+        return native(mesh)
+    return _compat_set_mesh(mesh)
+
+
+def _compat_set_mesh(mesh):
+    if hasattr(mesh, "__enter__"):
+        return mesh
+    return contextlib.nullcontext(mesh)
+
+
+def install():
+    """Add ``jax.shard_map`` / ``jax.set_mesh`` when this JAX predates them."""
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _compat_shard_map
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _compat_set_mesh

@@ -1,0 +1,58 @@
+"""GPipe pipeline parallelism over a mesh 'stage' axis.
+
+``pipeline_apply`` runs the classic fill-steady-drain microbatch schedule
+inside a ``shard_map``: stage s holds its own weights (in_spec sharded over
+the stage axis), microbatch m enters stage 0 at step m and reaches stage s
+at step m + s, activations hop stage->stage+1 with ``ppermute``.  After
+n_micro + n_stages - 1 steps the last stage has every output; a masked
+``psum`` replicates the (n_micro, mb, d) result across stages so the
+``out_specs=P()`` contract holds.
+
+``bubble_fraction`` is the idle fraction of the schedule,
+(S - 1) / (M + S - 1) -- the standard GPipe bubble; it is what the roofline
+charges pipeline-parallel cells.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bubble_fraction(n_micro: int, n_stages: int) -> float:
+    """Idle fraction of the GPipe schedule (0 when n_stages == 1)."""
+    if n_stages <= 1:
+        return 0.0
+    return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
+def pipeline_apply(stage_fn, stage_params, x, axis_name):
+    """Apply ``n_stages`` chained stages to ``n_micro`` microbatches.
+
+    Must run inside a ``shard_map`` manual over ``axis_name``.
+
+    stage_fn: ``(local_params, h) -> h`` for one stage (local_params keeps
+    its sharded leading stage dim, length 1 per device).
+    stage_params: per-stage weights, in_spec ``P(axis_name)``.
+    x: ``(n_micro, mb, ...)`` microbatched input, replicated (``P()``).
+    Returns the final-stage outputs ``(n_micro, mb, ...)``, replicated.
+    """
+    n_micro = x.shape[0]
+    n_stages = jax.lax.psum(1, axis_name)          # static under shard_map
+    sid = jax.lax.axis_index(axis_name)
+    is_first = sid == 0
+    is_last = sid == n_stages - 1
+    fwd = [(s, s + 1) for s in range(n_stages - 1)]
+
+    recv = jnp.zeros(x.shape[1:], x.dtype)
+    outputs = jnp.zeros_like(x)
+    for t in range(n_micro + n_stages - 1):
+        # stage 0 injects microbatch t; everyone else consumes last hop
+        x_t = x[t] if t < n_micro else jnp.zeros(x.shape[1:], x.dtype)
+        h = stage_fn(stage_params, jnp.where(is_first, x_t, recv))
+        m = t - (n_stages - 1)
+        if m >= 0:   # the last stage just finished microbatch m
+            outputs = jnp.where(is_last, outputs.at[m].set(h), outputs)
+        if t < n_micro + n_stages - 2:
+            recv = jax.lax.ppermute(h, axis_name, fwd)
+    # replicate the last stage's collected outputs to every stage
+    return jax.lax.psum(jnp.where(is_last, outputs, 0.0), axis_name)

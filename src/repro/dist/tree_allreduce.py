@@ -1,0 +1,159 @@
+"""k-tree allreduce under ``shard_map`` (the paper's Sec. 1.1 payoff, run).
+
+``repro.core.collectives.allreduce_schedule`` turns a set of k edge-disjoint
+spanning trees into per-tree reduce (leaves->root) and broadcast
+(root->leaves) rounds over *vertex ids*.  ``spec_from_schedule`` compiles
+those rounds into a static :class:`TreeAllreduceSpec` keyed to mesh axis
+names; ``tree_allreduce`` executes the spec inside a ``shard_map`` body with
+``jax.lax.ppermute``, striping the (flattened) gradient into k chunks --
+chunk j travels tree j, so the k trees use disjoint physical links and run
+concurrently.
+
+Vertex ids are the row-major flattened index over the mesh axes being
+reduced (``jax.lax.axis_index(axes)``), which matches how
+``repro.core.topologies.device_topology`` numbers the fabric.
+
+``ppermute`` needs unique sources *and* destinations per call, so schedule
+rounds that fan in (several children -> one parent) or fan out (one parent
+-> several children) are statically split into sub-rounds here; the tree
+semantics are unchanged (reduction is associative, broadcast idempotent).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# static spec
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TreeProgram:
+    """One tree's rounds, each a tuple of (src, dst) pairs with unique
+    sources and destinations (ppermute-legal)."""
+    root: int
+    reduce_rounds: tuple
+    bcast_rounds: tuple
+
+
+@dataclass(frozen=True)
+class TreeAllreduceSpec:
+    n: int                 # fabric size = product of the reduced axis sizes
+    axes: tuple            # mesh axis names the allreduce runs over
+    trees: tuple           # tuple[TreeProgram]
+
+    @property
+    def k(self) -> int:
+        return len(self.trees)
+
+    @property
+    def depth(self) -> int:
+        return max((len(t.bcast_rounds) for t in self.trees), default=0)
+
+
+def _split_unique(msgs):
+    """Partition one round's (src, dst) messages into ppermute-legal
+    sub-rounds: within a sub-round no vertex repeats as src or as dst."""
+    out = []
+    remaining = list(msgs)
+    while remaining:
+        srcs, dsts, taken, rest = set(), set(), [], []
+        for s, d in remaining:
+            if s in srcs or d in dsts:
+                rest.append((s, d))
+            else:
+                srcs.add(s)
+                dsts.add(d)
+                taken.append((s, d))
+        out.append(tuple(taken))
+        remaining = rest
+    return out
+
+
+def _compile_rounds(rounds):
+    out = []
+    for msgs in rounds:
+        out.extend(_split_unique(msgs))
+    return tuple(out)
+
+
+def spec_from_schedule(sched, axis_names) -> TreeAllreduceSpec:
+    """Compile an :class:`repro.core.collectives.AllreduceSchedule` into a
+    static spec bound to the given mesh axis names."""
+    trees = tuple(
+        TreeProgram(root=ts.root,
+                    reduce_rounds=_compile_rounds(ts.reduce_rounds),
+                    bcast_rounds=_compile_rounds(ts.bcast_rounds))
+        for ts in sched.trees)
+    return TreeAllreduceSpec(n=sched.n, axes=tuple(axis_names), trees=trees)
+
+
+# ---------------------------------------------------------------------------
+# execution (inside shard_map)
+# ---------------------------------------------------------------------------
+
+def _axis_arg(spec: TreeAllreduceSpec):
+    return spec.axes[0] if len(spec.axes) == 1 else tuple(spec.axes)
+
+
+def _send(x, axis, perm, quantize: bool):
+    """ppermute a chunk; devices nobody sends to receive zeros.  With
+    ``quantize`` the payload travels as int8 with a per-chunk f32 scale
+    (two collectives), cutting wire bytes 4x for f32 gradients."""
+    if not quantize:
+        return jax.lax.ppermute(x, axis, list(perm))
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    q_r = jax.lax.ppermute(q, axis, list(perm))
+    s_r = jax.lax.ppermute(scale.astype(jnp.float32), axis, list(perm))
+    return q_r.astype(x.dtype) * s_r.astype(x.dtype)
+
+
+def _dst_mask(perm, n: int, axis):
+    """Traced bool: is this device a destination of ``perm``?"""
+    table = [False] * n
+    for _, d in perm:
+        table[d] = True
+    idx = jax.lax.axis_index(axis)
+    return jnp.asarray(table)[idx]
+
+
+def tree_allreduce(x, spec: TreeAllreduceSpec, quantize: bool = False):
+    """Allreduce (sum) of the per-device array ``x`` over ``spec.axes``.
+
+    Must run inside a ``shard_map`` whose manual axes include ``spec.axes``.
+    ``x`` is flattened, zero-padded to a multiple of k and split into k
+    chunks; chunk j is reduced up and broadcast down tree j.  Returns the
+    summed array in the original shape (replicated across the fabric).
+    """
+    if spec.k == 0:
+        return x
+    axis = _axis_arg(spec)
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1)
+    pad = (-flat.size) % spec.k
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(spec.k, -1)
+
+    outs = []
+    for j, tree in enumerate(spec.trees):
+        c = chunks[j]
+        # reduce: every non-root sends its accumulated value to its parent
+        # exactly once, deepest level first, so parents accumulate complete
+        # subtree sums before forwarding
+        for perm in tree.reduce_rounds:
+            c = c + _send(c, axis, perm, quantize)
+        # broadcast: the root's total overwrites down the levels
+        for perm in tree.bcast_rounds:
+            recv = _send(c, axis, perm, quantize)
+            c = jnp.where(_dst_mask(perm, spec.n, axis), recv, c)
+        outs.append(c)
+
+    out = jnp.concatenate(outs) if spec.k > 1 else outs[0]
+    if pad:
+        out = out[:-pad]
+    return out.reshape(shape).astype(dtype)

@@ -10,6 +10,25 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
+# Offline fallback: this container cannot install hypothesis, so register a
+# seeded deterministic shim in its place (property-test bodies unchanged).
+# The real package wins whenever it is importable.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import _hypothesis_shim
+
+    _hypothesis_shim.install()
+
+
+def pytest_collection_modifyitems(items):
+    """Every test driving the multi-device subprocess runner is 'slow';
+    deselect the tier with ``-m "not slow"`` for the fast unit tier."""
+    for item in items:
+        if "subproc" in getattr(item, "fixturenames", ()):
+            item.add_marker(pytest.mark.slow)
+
 
 def run_with_devices(code: str, n_devices: int, timeout: int = 560) -> str:
     """Run a python snippet in a subprocess with N fake host devices."""
