@@ -1,0 +1,122 @@
+"""Link-failure sweep over star-product fabrics: how gracefully does the
+EDST allreduce degrade, and how much does a Roskind-Tarjan rebuild recover?
+
+For each topology and each failure count f, kill f random links (seeded
+trials), then record for the three recovery stages -- healthy, degraded
+(surviving trees only), rebuilt (max repacking of the residual fabric) --
+the tree count, schedule depth, and modelled allreduce cost / effective
+bandwidth from :class:`repro.core.collectives.CostModel`.
+
+    PYTHONPATH=src python -m benchmarks.fault_sweep --out fault_sweep.json
+    PYTHONPATH=src python -m benchmarks.fault_sweep --nbytes 16777216 --trials 2
+
+Emits the JSON report to ``--out`` (default stdout).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import topologies as topo  # noqa: E402
+from repro.core.collectives import CostModel, allreduce_schedule  # noqa: E402
+from repro.core.edst_star import star_edsts  # noqa: E402
+from repro.core.fault import rebuild_edsts, surviving_trees  # noqa: E402
+
+TOPOLOGIES = (
+    ("slimfly-q5", lambda: topo.slimfly(5)),
+    ("bundlefly-q4-a5", lambda: topo.bundlefly(4, 5)),
+    ("polarstar-q3-qr5", lambda: topo.polarstar(3, "qr", 5)),
+    ("torus-4x4", lambda: topo.torus([4, 4])),
+    ("torus-4x4x4", lambda: topo.torus([4, 4, 4])),
+)
+FAILURE_COUNTS = (0, 1, 2, 4)
+
+
+def _stage(name, n, trees, cm: CostModel, nbytes: float) -> dict:
+    if not trees:
+        return {"stage": name, "k": 0, "depth": None, "cost_ms": None,
+                "gbps": 0.0}
+    sched = allreduce_schedule(n, trees)
+    cost = cm.edst_tree_allreduce(nbytes, sched)
+    return {"stage": name, "k": sched.k, "depth": sched.depth,
+            "cost_ms": round(cost * 1e3, 4),
+            "gbps": round(nbytes / cost / 1e9, 3)}
+
+
+def sweep_topology(name, sp, cm: CostModel, nbytes: float, trials: int,
+                   failure_counts=FAILURE_COUNTS, seed: int = 0) -> dict:
+    g = sp.product()
+    res = star_edsts(sp)
+    trees = res.trees
+    edges = sorted(g.edges)
+    healthy = _stage("healthy", g.n, trees, cm, nbytes)
+    rows = []
+    for nfail in failure_counts:
+        for trial in range(trials if nfail else 1):
+            rng = np.random.RandomState(seed + 7919 * trial + nfail)
+            kill = ({edges[i] for i in
+                     rng.choice(len(edges), size=nfail, replace=False)}
+                    if nfail else set())
+            keep = surviving_trees(trees, kill)
+            t0 = time.perf_counter()
+            rebuilt, residual = rebuild_edsts(g, kill)
+            rebuild_s = time.perf_counter() - t0
+            rows.append({
+                "failures": nfail,
+                "trial": trial,
+                "killed_tree_links": sum(1 for t in trees if set(t) & kill),
+                "residual_connected": residual.is_connected(),
+                "rebuild_s": round(rebuild_s, 4),
+                "stages": [
+                    _stage("degraded", g.n, keep, cm, nbytes),
+                    _stage("rebuilt", g.n, rebuilt, cm, nbytes),
+                ],
+            })
+    return {"topology": name, "n": g.n, "m": g.m, "k": res.count,
+            "theorem": res.theorem, "healthy": healthy, "sweep": rows}
+
+
+def run_sweep(nbytes: float = 64 << 20, trials: int = 3,
+              topologies=TOPOLOGIES, failure_counts=FAILURE_COUNTS,
+              seed: int = 0) -> dict:
+    cm = CostModel()
+    return {
+        "nbytes": nbytes,
+        "cost_model": {"link_bw": cm.link_bw, "alpha": cm.alpha,
+                       "segment": cm.segment},
+        "failure_counts": list(failure_counts),
+        "topologies": [sweep_topology(name, mk(), cm, nbytes, trials,
+                                      failure_counts, seed)
+                       for name, mk in topologies],
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=None, help="write JSON here (else stdout)")
+    ap.add_argument("--nbytes", type=int, default=64 << 20)
+    ap.add_argument("--trials", type=int, default=3,
+                    help="seeded trials per nonzero failure count")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    report = run_sweep(nbytes=args.nbytes, trials=args.trials, seed=args.seed)
+    text = json.dumps(report, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        ntop = len(report["topologies"])
+        print(f"[fault_sweep] {ntop} topologies x {len(FAILURE_COUNTS)} "
+              f"failure counts -> {args.out}")
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

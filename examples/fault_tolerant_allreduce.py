@@ -1,55 +1,100 @@
-"""Fault tolerance on EDST collectives: kill links, keep training.
+"""Elastic EDST allreduce: kill links mid-run, keep the compiled step.
 
-Demonstrates the paper's fault-tolerance payoff on the 2-pod fabric:
-  1. build maximal EDSTs on the 512-chip (2,16,16) torus;
-  2. fail a link: the surviving tree keeps the allreduce correct (degraded);
-  3. Roskind-Tarjan rebuild on the residual fabric restores 2 trees;
-  4. straggler mitigation: rebalance chunk fractions around a slow chip.
+Drives :mod:`repro.dist.fault` end to end on 16 fake host devices (a 4x4
+torus DP fabric):
+  1. build the elastic runtime: ONE compile covers the healthy k-tree
+     schedule plus every degraded/rebuilt failure-class program;
+  2. run the jitted allreduce healthy, then fail a tree-0 link: recovery is
+     a scalar schedule-id flip into the SAME compiled executable (no
+     retrace), verified numerically against the plain sum;
+  3. compare the immediate degraded program (k-1 striping, ~1/k bandwidth
+     lost) with the precompiled Roskind-Tarjan rebuilt program;
+  4. a multi-tree failure escapes the precompiled classes ->
+     ``with_rebuild`` repacks the actual residual fabric (one new compile);
+  5. straggler mitigation stays schedule-level: ``rebalance_chunks``
+     re-stripes chunk fractions around a slow chip.
+
+Expected output (exact ids/links can shift with the EDST construction):
+
+    elastic runtime: n=16 fabric, k=2 trees, 5 precompiled programs
+      id 0: full            k=2 depth=10   48.1 GB/s
+      id 1: degraded/tree0  k=1 depth=10   24.5 GB/s
+      ...
+    healthy allreduce correct: True (schedule id 0)
+    *** link failure (4, 8) -> schedule id flips, no retrace ***
+    recovery program rebuilt/tree0: k=1, correct: True
+    bandwidth: healthy 48.1 GB/s -> degraded 24.5 GB/s -> rebuilt 24.5 GB/s
+    *** multi-tree failure -> dynamic rebuild ***
+    with_rebuild: k=1 on the residual fabric, sim correct: True
+    *** straggler: chip 5 running 8x slow ***
+    re-striped chunk fractions: [...]
 
     PYTHONPATH=src python examples/fault_tolerant_allreduce.py
 """
-import numpy as np
+import os
 
-from repro.core import (FailureEvent, FaultTolerantAllreduce,
-                        allreduce_schedule, rebalance_chunks,
-                        simulate_allreduce, star_edsts)
-from repro.core import topologies as topo
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=16")
 
-fabric = topo.device_topology((2, 16, 16))
-g = fabric.product()
-res = star_edsts(fabric)
-print(f"fabric: 2-pod v5e, |V|={g.n}, |E|={g.m}; EDSTs={res.count} "
-      f"(maximal={res.maximal}, theorem {res.theorem})")
+import jax                                                        # noqa: E402
+import jax.numpy as jnp                                           # noqa: E402
+from jax.sharding import PartitionSpec as P                       # noqa: E402
 
-sched = allreduce_schedule(g.n, res.trees)
-fta = FaultTolerantAllreduce(g, sched)
-vals = np.random.RandomState(0).randn(g.n, 32)
-print("healthy allreduce correct:",
-      simulate_allreduce(fta.schedule, vals).ok, f"(k={fta.k})")
+import repro.dist                                                 # noqa: E402
+from repro.core.fault import FailureEvent, rebalance_chunks       # noqa: E402
+from repro.dist.fault import NoScheduleError                      # noqa: E402
+from repro.dist.steps import fault_runtime_for_mesh               # noqa: E402
 
-# fail one link used by tree 0
-dead_link = next(iter(res.trees[0]))
-print(f"\n*** link failure: {dead_link} ***")
-fta = fta.on_failure(FailureEvent(links=frozenset({dead_link})))
-print(f"degraded mode: k={fta.k} surviving tree(s); allreduce correct:",
-      simulate_allreduce(fta.schedule, vals).ok)
+# 1. the elastic runtime: all failure-class programs precompiled ------------
+rt = fault_runtime_for_mesh((16, 1), ("data", "model"), dp_torus_shape=(4, 4))
+report = rt.report(nbytes=64 << 20)
+print(f"elastic runtime: n={report['n']} fabric, k={report['k']} trees, "
+      f"{len(report['entries'])} precompiled programs")
+for row in report["entries"]:
+    print(f"  id {row['id']}: {row['name']:15s} k={row['k']} "
+          f"depth={row['depth']:<3d} {row['gbps']:5.1f} GB/s")
 
-fta = fta.rebuild()
-print(f"after Roskind-Tarjan rebuild on residual fabric: k={fta.k}; correct:",
-      simulate_allreduce(fta.schedule, vals).ok)
-print("history:", fta.history)
+# 2. jitted switch: healthy run, then a link failure mid-run ----------------
+mesh = jax.make_mesh((16, 1), ("data", "model"))
+sync = rt.make_allreduce()
+x = jnp.arange(16 * 37, dtype=jnp.float32).reshape(16, 37) * 0.01
+expect = jnp.tile(x.sum(0), (16, 1))
 
-# straggler mitigation
-print("\n*** straggler: chip 37 running 4x slow ***")
-fracs = rebalance_chunks(fta.schedule, {37: 4.0})
-print("per-tree chunk fractions:", [round(f, 3) for f in fracs])
+f = jax.jit(jax.shard_map(
+    lambda xs, sid: sync(xs.reshape(xs.shape[1:]), sid)[None],
+    mesh=mesh, in_specs=(P("data"), P()), out_specs=P("data"),
+    axis_names={"data"}, check_vma=False))
 
-# a failed NODE kills every spanning tree -> eager rebuild on the 511
-# surviving chips (the dead chip is excluded from the collective)
-print("\n*** node failure: chip 100 ***")
-fta2 = FaultTolerantAllreduce(g, sched).on_failure(
-    FailureEvent(nodes=frozenset({100})))
-vals511 = np.random.RandomState(1).randn(fta2.graph.n, 32)
-print(f"rebuilt on residual fabric: k={fta2.k}, chips={fta2.graph.n}; "
-      f"correct: {simulate_allreduce(fta2.schedule, vals511).ok}")
-print("history:", fta2.history)
+y = f(x, jnp.int32(0))
+print(f"\nhealthy allreduce correct: {bool(jnp.allclose(y, expect))} "
+      f"(schedule id 0)")
+
+dead = next(iter(rt.entries[0].sched.trees[0].tree))
+print(f"\n*** link failure {dead} -> schedule id flips, no retrace ***")
+rt_fail = rt.on_failure(FailureEvent(links=frozenset({dead})))
+y2 = f(x, jnp.int32(rt_fail.active))      # same executable, new scalar
+print(f"recovery program {rt_fail.entry.name}: k={rt_fail.entry.k}, "
+      f"correct: {bool(jnp.allclose(y2, expect))}")
+
+# 3. degraded vs rebuilt bandwidth ------------------------------------------
+nb = 64 << 20
+deg = rt.on_failure(FailureEvent(links=frozenset({dead})), prefer="degraded")
+print(f"bandwidth: healthy {rt.effective_bandwidth(nb, 0) / 1e9:.1f} GB/s -> "
+      f"degraded {deg.effective_bandwidth(nb) / 1e9:.1f} GB/s -> "
+      f"rebuilt {rt_fail.effective_bandwidth(nb) / 1e9:.1f} GB/s")
+
+# 4. beyond the precompiled classes: dynamic rebuild ------------------------
+print("\n*** multi-tree failure -> dynamic rebuild ***")
+multi = FailureEvent(links=frozenset(
+    next(iter(e.sched.trees[0].tree)) for e in rt.entries))
+try:
+    rt.on_failure(multi)
+    print("unexpected: a precompiled program survived")
+except NoScheduleError:
+    rt_dyn = rt.with_rebuild(multi)
+    print(f"with_rebuild: k={rt_dyn.k} on the residual fabric, "
+          f"sim correct: {rt_dyn.verify_entry(0)}")
+
+# 5. straggler mitigation (schedule-level, from core.fault) -----------------
+print("\n*** straggler: chip 5 running 8x slow ***")
+fracs = rebalance_chunks(rt.entries[0].sched, {5: 8.0})
+print("re-striped chunk fractions:", [round(fr, 3) for fr in fracs])

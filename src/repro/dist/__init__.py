@@ -12,7 +12,10 @@ Four modules wire the paper's edge-disjoint-spanning-tree constructions
     gradient sync (gspmd | psum_dp | edst) and the mesh -> star-product
     decomposition chooser;
   * :mod:`repro.dist.pipeline`       -- GPipe microbatch schedule over a
-    'stage' mesh axis.
+    'stage' mesh axis;
+  * :mod:`repro.dist.fault`          -- elastic EDST runtime: precompiled
+    degraded/rebuilt schedules per failure class, switched by a traced
+    schedule id without retracing.
 
 See README.md in this directory for the data flow.
 """
@@ -20,6 +23,6 @@ from . import compat as _compat
 
 _compat.install()
 
-from . import pipeline, sharding, steps, tree_allreduce  # noqa: E402
+from . import fault, pipeline, sharding, steps, tree_allreduce  # noqa: E402
 
-__all__ = ["sharding", "steps", "tree_allreduce", "pipeline"]
+__all__ = ["sharding", "steps", "tree_allreduce", "pipeline", "fault"]

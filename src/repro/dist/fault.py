@@ -1,0 +1,288 @@
+"""Elastic EDST runtime: precompiled failure-class schedules, no retracing.
+
+``repro.core.fault`` knows *what* to do when links die (keep the surviving
+edge-disjoint trees, repack the residual fabric with Roskind-Tarjan,
+re-stripe chunks around stragglers) but is pure Python over ``Graph``
+objects.  This module turns that machinery into runnable distributed
+behavior under ``shard_map``:
+
+  * :class:`FaultAwareAllreduce` compiles, up front, one ppermute program
+    per *failure class*: the healthy k-tree schedule, one degraded
+    (k-1)-tree schedule per tree (valid for ANY single-link failure inside
+    that tree, because edge-disjointness means the dead link belongs to
+    exactly one tree), and one rebuilt-EDST schedule per tree (Roskind-
+    Tarjan repacking of the fabric minus that whole tree, so it is also
+    valid for the entire class).
+  * :func:`FaultAwareAllreduce.make_allreduce` wraps the programs in a
+    single ``jax.lax.switch`` keyed by a *traced* integer schedule id, so
+    flipping from the healthy schedule to a degraded or rebuilt one is a
+    scalar update -- the jitted train step is never retraced.
+  * Chunk striping is weighted by :func:`repro.core.fault.rebalance_chunks`
+    (inverse critical-path cost), so when a tree dies the gradient
+    re-stripes over the survivors and sync degrades from k-way to
+    (k-1)-way bandwidth instead of failing.
+
+Failures outside the precompiled classes (multiple trees hit at once, node
+loss) go through :meth:`FaultAwareAllreduce.with_rebuild`, which repacks
+the actual residual fabric into a NEW runtime -- one fresh compile,
+amortized over the rest of the run (core.fault's "rebuild in the
+background" step made concrete).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.collectives import (AllreduceSchedule, CostModel,
+                                allreduce_schedule, simulate_allreduce)
+from ..core.edst_rt import max_edsts
+from ..core.fault import FailureEvent, rebalance_chunks
+from ..core.graph import Graph, canon
+from .tree_allreduce import (TreeAllreduceSpec, _axis_arg, run_tree_program,
+                             spec_from_schedule)
+
+
+class NoScheduleError(RuntimeError):
+    """No precompiled schedule survives the failure; a dynamic rebuild
+    (``with_rebuild``) or an elastic rescale (``repro.launch.elastic``) is
+    required before the collective can resume."""
+
+
+# ---------------------------------------------------------------------------
+# schedule entries
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ScheduleEntry:
+    """One precompiled failure-class program."""
+    name: str                      # "full" | "degraded/tree<j>" | "rebuilt/tree<j>"
+    spec: TreeAllreduceSpec        # ppermute-legal rounds (static)
+    fractions: tuple               # per-tree chunk fractions, sum 1
+    sched: AllreduceSchedule | None  # core schedule (cost model / simulator)
+
+    @property
+    def k(self) -> int:
+        return self.spec.k
+
+    @property
+    def depth(self) -> int:
+        return self.spec.depth
+
+    def uses_link(self, dead_links: set) -> bool:
+        if self.sched is None:
+            return False
+        return any(set(ts.tree) & dead_links for ts in self.sched.trees)
+
+
+def chunk_sizes(total: int, fractions) -> tuple:
+    """Apportion ``total`` elements to trees by largest-remainder rounding;
+    sizes sum exactly to ``total`` (a retired tree -- fraction 0 -- gets 0)."""
+    raw = [f * total for f in fractions]
+    sizes = [int(np.floor(r)) for r in raw]
+    leftover = total - sum(sizes)
+    order = sorted(range(len(raw)), key=lambda i: (sizes[i] - raw[i], i))
+    for i in order[:leftover]:
+        sizes[i] += 1
+    return tuple(sizes)
+
+
+def striped_tree_allreduce(x, spec: TreeAllreduceSpec, fractions,
+                           quantize: bool = False):
+    """Weighted-stripe k-tree allreduce: contiguous slice j of the flattened
+    array (``chunk_sizes(size, fractions)[j]`` elements) travels tree j.
+
+    Unlike :func:`repro.dist.tree_allreduce.tree_allreduce`'s uniform
+    striping this needs no padding -- slices are unequal but exact -- and a
+    fraction-0 tree is skipped entirely (retired straggler / dead tree).
+    """
+    if spec.k == 0:
+        return x
+    axis = _axis_arg(spec)
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1)
+    sizes = chunk_sizes(flat.size, fractions)
+    outs, off = [], 0
+    for tree, sz in zip(spec.trees, sizes):
+        if sz == 0:
+            continue
+        c = run_tree_program(flat[off:off + sz], tree, spec.n, axis, quantize)
+        outs.append(c)
+        off += sz
+    out = jnp.concatenate(outs) if len(outs) > 1 else outs[0]
+    return out.reshape(shape).astype(dtype)
+
+
+def _entry(name: str, n: int, trees, axes) -> ScheduleEntry:
+    trees = [frozenset(canon(*e) for e in t) for t in trees]
+    if not trees:
+        return ScheduleEntry(name, TreeAllreduceSpec(n=n, axes=tuple(axes),
+                                                     trees=()), (), None)
+    sched = allreduce_schedule(n, trees)
+    fracs = tuple(rebalance_chunks(sched, {}))
+    return ScheduleEntry(name, spec_from_schedule(sched, axes), fracs, sched)
+
+
+# ---------------------------------------------------------------------------
+# the runtime
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FaultAwareAllreduce:
+    """Precompiled healthy/degraded/rebuilt EDST allreduce programs with a
+    scalar schedule id selecting among them (see module docstring).
+
+    Entry layout (k = healthy tree count):
+      id 0          -- full k-tree schedule;
+      id 1 .. k     -- degraded: tree j-1 lost, chunks re-striped over the
+                       k-1 survivors;
+      id k+1 .. 2k  -- rebuilt: max EDST repacking of the fabric minus all
+                       of tree j-k-1's links (>= the degraded k-1, often k).
+    """
+    graph: Graph
+    axes: tuple
+    entries: tuple                 # tuple[ScheduleEntry]
+    active: int = 0
+    history: list = field(default_factory=list)
+
+    @classmethod
+    def build(cls, graph: Graph, trees, axis_names) -> "FaultAwareAllreduce":
+        trees = [frozenset(canon(*e) for e in t) for t in trees]
+        axes = tuple(axis_names)
+        k = len(trees)
+        entries = [_entry("full", graph.n, trees, axes)]
+        for j in range(k):
+            keep = trees[:j] + trees[j + 1:]
+            entries.append(_entry(f"degraded/tree{j}", graph.n, keep, axes))
+        for j in range(k):
+            # class rebuild: drop ALL of tree j's links, so the repacked
+            # trees avoid any single link failure attributable to tree j
+            residual = graph.without_edges(trees[j])
+            rebuilt = max_edsts(residual)[0] if residual.is_connected() else []
+            if not rebuilt:  # k=1 fabrics: nothing to repack from
+                rebuilt = trees[:j] + trees[j + 1:]
+            entries.append(_entry(f"rebuilt/tree{j}", graph.n, rebuilt, axes))
+        return cls(graph, axes, tuple(entries))
+
+    @property
+    def k(self) -> int:
+        return self.entries[0].k
+
+    @property
+    def entry(self) -> ScheduleEntry:
+        return self.entries[self.active]
+
+    # -- failure handling ---------------------------------------------------
+
+    def valid_ids(self, event: FailureEvent) -> list:
+        """Precompiled schedules whose trees avoid every dead link."""
+        dead = event.dead_links(self.graph)
+        return [i for i, e in enumerate(self.entries)
+                if e.k > 0 and not e.uses_link(dead)]
+
+    def on_failure(self, event: FailureEvent,
+                   prefer: str = "max_k") -> "FaultAwareAllreduce":
+        """Select the recovery schedule for ``event`` -- a scalar id flip,
+        never a retrace.  ``prefer="max_k"`` picks the surviving program
+        with the most trees (rebuilt classes usually restore k);
+        ``prefer="degraded"`` picks the lowest valid id (the plain
+        surviving-tree program, mirroring core.fault's immediate degraded
+        mode).  Raises :class:`NoScheduleError` when no precompiled program
+        survives (multi-tree wipeout, node loss) -- use ``with_rebuild``.
+        """
+        if event.nodes:
+            raise NoScheduleError(
+                "node loss changes the fabric; rescale via repro.launch.elastic")
+        valid = self.valid_ids(event)
+        if not valid:
+            raise NoScheduleError(
+                "no precompiled schedule survives; use with_rebuild(event)")
+        if prefer == "degraded":
+            pick = valid[0]
+        else:
+            pick = max(valid, key=lambda i: (self.entries[i].k,
+                                             -self.entries[i].depth, -i))
+        hist = self.history + [(self.entries[pick].name, self.entries[pick].k)]
+        return replace(self, active=pick, history=hist)
+
+    def with_rebuild(self, event: FailureEvent) -> "FaultAwareAllreduce":
+        """Dynamic fallback for failures outside the precompiled classes:
+        Roskind-Tarjan repack of the ACTUAL residual fabric into a fresh
+        runtime (one new compile, then switching is free again)."""
+        if event.nodes:
+            raise NoScheduleError(
+                "node loss changes the fabric; rescale via repro.launch.elastic")
+        dead = event.dead_links(self.graph)
+        residual = self.graph.without_edges(dead)
+        if not residual.is_connected():
+            raise NoScheduleError("residual fabric disconnected")
+        trees, _ = max_edsts(residual)
+        if not trees:
+            raise NoScheduleError("residual fabric packs no spanning tree")
+        rebuilt = FaultAwareAllreduce.build(residual, trees, self.axes)
+        rebuilt.history = self.history + [("with_rebuild", len(trees))]
+        return rebuilt
+
+    # -- execution ----------------------------------------------------------
+
+    def make_allreduce(self, quantize: bool = False):
+        """``allreduce(x, schedule_id)`` for use inside ``shard_map``: a
+        ``jax.lax.switch`` over the precompiled programs.  Pass
+        ``schedule_id`` as a traced ``jnp.int32`` scalar so every program
+        compiles into the one executable and switching never retraces
+        (a Python int would constant-fold the switch away)."""
+        entries = self.entries
+
+        def branch(e: ScheduleEntry):
+            if e.k == 0:
+                return lambda v: v  # unreachable via on_failure; identity
+            return lambda v: striped_tree_allreduce(v, e.spec, e.fractions,
+                                                    quantize)
+
+        branches = [branch(e) for e in entries]
+
+        def allreduce(x, schedule_id):
+            return jax.lax.switch(schedule_id, branches, x)
+
+        return allreduce
+
+    # -- reporting ----------------------------------------------------------
+
+    def effective_bandwidth(self, nbytes: float, entry_id: int | None = None,
+                            cost_model: CostModel | None = None) -> float:
+        """bytes/s the schedule sustains for an ``nbytes`` allreduce."""
+        e = self.entries[self.active if entry_id is None else entry_id]
+        if e.sched is None:
+            return 0.0
+        cm = cost_model or CostModel()
+        return nbytes / cm.edst_tree_allreduce(nbytes, e.sched)
+
+    def verify_entry(self, entry_id: int, d: int | None = None,
+                     seed: int = 0) -> bool:
+        """Packet-level correctness of one program (numpy simulator)."""
+        e = self.entries[entry_id]
+        if e.sched is None:
+            return False
+        d = d or 8 * e.k
+        vals = np.random.RandomState(seed).randn(self.graph.n, d)
+        return simulate_allreduce(e.sched, vals).ok
+
+    def report(self, nbytes: float = 64 << 20,
+               cost_model: CostModel | None = None) -> dict:
+        """One row per precompiled program: tree count, schedule depth,
+        modelled allreduce cost and effective bandwidth."""
+        cm = cost_model or CostModel()
+        rows = []
+        for i, e in enumerate(self.entries):
+            # k=0 entries (k=1 fabrics with nothing to repack from) carry no
+            # cost: report None/0, not inf -- json.dumps(inf) is invalid JSON
+            cost = (cm.edst_tree_allreduce(nbytes, e.sched)
+                    if e.sched is not None else None)
+            rows.append({"id": i, "name": e.name, "k": e.k,
+                         "depth": e.depth,
+                         "cost_ms": None if cost is None else cost * 1e3,
+                         "gbps": 0.0 if cost is None else nbytes / cost / 1e9})
+        return {"n": self.graph.n, "k": self.k, "active": self.active,
+                "nbytes": nbytes, "entries": rows}

@@ -15,7 +15,11 @@ gradients are combined:
 
 All three modes compute identical gradients (up to float reassociation), so
 they can be A/B'd freely; ``grad_accum`` microbatches the local batch and
-``quantize`` sends int8 chunks over the trees.
+``quantize`` sends int8 chunks over the trees.  Passing ``fault_runtime``
+(see :mod:`repro.dist.fault`) makes the ``edst`` mode failure-event aware:
+the step takes a traced ``schedule_id`` selecting among precompiled
+healthy/degraded/rebuilt tree programs, so link failures are handled by a
+scalar flip instead of a retrace.
 
 ``edst_spec_for_mesh`` maps a device mesh to the star-product decomposition
 of its data-parallel fabric.  By default the DP axes themselves are taken as
@@ -37,6 +41,7 @@ from ..core.collectives import allreduce_schedule
 from ..core.edst_star import star_edsts
 from . import sharding as shd
 from .compat import shard_map
+from .fault import FaultAwareAllreduce
 from .tree_allreduce import TreeAllreduceSpec, spec_from_schedule, tree_allreduce
 
 SYNC_MODES = ("gspmd", "psum_dp", "edst")
@@ -59,9 +64,8 @@ def dp_size(mesh) -> int:
     return n
 
 
-def edst_spec_for_mesh(mesh_shape, axis_names,
-                       dp_torus_shape=None) -> TreeAllreduceSpec:
-    """EDST allreduce spec for the data-parallel fabric of a device mesh.
+def dp_fabric_for_mesh(mesh_shape, axis_names, dp_torus_shape=None):
+    """The data-parallel fabric of a device mesh: (star_product, dp_axis_names).
 
     The DP fabric is the sub-mesh spanned by the ("pod", "data") axes; its
     physical ICI graph is taken to be the torus over those extents (row-major
@@ -80,9 +84,27 @@ def edst_spec_for_mesh(mesh_shape, axis_names,
         else tuple(d for d in dims if d > 1)
     if int(np.prod(phys)) != n:
         raise ValueError(f"dp_torus_shape {phys} != DP extent {n}")
-    sp = topo.device_topology(phys)
+    return topo.device_topology(phys), names
+
+
+def edst_spec_for_mesh(mesh_shape, axis_names,
+                       dp_torus_shape=None) -> TreeAllreduceSpec:
+    """EDST allreduce spec for the data-parallel fabric of a device mesh
+    (see :func:`dp_fabric_for_mesh` for the fabric choice)."""
+    sp, names = dp_fabric_for_mesh(mesh_shape, axis_names, dp_torus_shape)
     sched = allreduce_schedule(sp.n, star_edsts(sp).trees)
     return spec_from_schedule(sched, names)
+
+
+def fault_runtime_for_mesh(mesh_shape, axis_names,
+                           dp_torus_shape=None) -> FaultAwareAllreduce:
+    """Elastic EDST runtime (precompiled degraded/rebuilt failure-class
+    schedules) for the data-parallel fabric of a device mesh.  Pass the
+    result to ``make_train_step(mode="edst", fault_runtime=...)`` and feed
+    its schedule ids into the step's ``schedule_id`` argument."""
+    sp, names = dp_fabric_for_mesh(mesh_shape, axis_names, dp_torus_shape)
+    return FaultAwareAllreduce.build(sp.product(), star_edsts(sp).trees,
+                                     names)
 
 
 # ---------------------------------------------------------------------------
@@ -91,19 +113,38 @@ def edst_spec_for_mesh(mesh_shape, axis_names,
 
 def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
                     grad_accum: int = 1, quantize: bool = False,
-                    dp_torus_shape=None):
-    """Build the jittable train step.  See module docstring for ``mode``."""
+                    dp_torus_shape=None, fault_runtime=None):
+    """Build the jittable train step.  See module docstring for ``mode``.
+
+    ``fault_runtime`` (a :class:`repro.dist.fault.FaultAwareAllreduce`,
+    ``mode="edst"`` only) makes the step failure-event aware: its signature
+    becomes ``step(params, opt_state, batch, schedule_id)`` where
+    ``schedule_id`` is a traced ``jnp.int32`` scalar selecting among the
+    runtime's precompiled healthy/degraded/rebuilt programs -- the driver
+    maps a failure-event stream to ids via ``fault_runtime.on_failure`` and
+    flips the scalar, never triggering a retrace.
+    """
     if mode not in SYNC_MODES:
         raise ValueError(f"mode {mode!r} not in {SYNC_MODES}")
+    if fault_runtime is not None and mode != "edst":
+        raise ValueError("fault_runtime requires mode='edst'")
     dp = dp_axes_of(mesh)
     ndp = dp_size(mesh)
     dp_arg = dp[0] if len(dp) == 1 else tuple(dp)
     manual_dp = mode in ("psum_dp", "edst") and ndp > 1
 
-    tree_spec = None
+    tree_spec = fault_sync = None
     if mode == "edst" and manual_dp:
-        tree_spec = edst_spec_for_mesh(tuple(mesh.devices.shape),
-                                       tuple(mesh.axis_names), dp_torus_shape)
+        if fault_runtime is not None:
+            if fault_runtime.graph.n != ndp:
+                raise ValueError(
+                    f"fault_runtime fabric n={fault_runtime.graph.n} != "
+                    f"DP extent {ndp}; rebuild it with fault_runtime_for_mesh")
+            fault_sync = fault_runtime.make_allreduce(quantize)
+        else:
+            tree_spec = edst_spec_for_mesh(tuple(mesh.devices.shape),
+                                           tuple(mesh.axis_names),
+                                           dp_torus_shape)
 
     # FSDP is expressed through the shardings callers place params/opt state
     # with (``sharding.tree_shardings(..., fsdp=fsdp)``, e.g. as jit
@@ -143,11 +184,11 @@ def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
         aux = jax.tree.map(jnp.mean, auxs)
         return loss, aux, grads
 
-    def synced_loss_and_grads(params, batch):
+    def synced_loss_and_grads(params, batch, schedule_id=None):
         if not manual_dp:
             return local_loss_and_grads(params, batch)
 
-        def local(p, b):
+        def local(p, b, sid):
             loss, aux, grads = local_loss_and_grads(p, b)
             loss = jax.lax.pmean(loss, dp_arg)
             aux = jax.tree.map(lambda a: jax.lax.pmean(a, dp_arg), aux)
@@ -156,7 +197,10 @@ def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
                     lambda g: jax.lax.psum(g, dp_arg) / ndp, grads)
             else:
                 flat, unravel = ravel_pytree(grads)
-                flat = tree_allreduce(flat, tree_spec, quantize=quantize)
+                if fault_sync is not None:
+                    flat = fault_sync(flat, sid)
+                else:
+                    flat = tree_allreduce(flat, tree_spec, quantize=quantize)
                 grads = unravel(flat / ndp)
             return loss, aux, grads
 
@@ -167,15 +211,26 @@ def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
         # ("Check failed: sharding.IsManualSubgroup()") on the remat'd scan
         # -- revisit when the toolchain moves past 0.4.x.  Production
         # TP+FSDP meshes should use mode="gspmd" meanwhile.
+        if schedule_id is None:
+            schedule_id = jnp.int32(0)
         return shard_map(local, mesh=mesh,
-                         in_specs=(P(), P(dp_arg)),
+                         in_specs=(P(), P(dp_arg), P()),
                          out_specs=(P(), P(), P()),
-                         check_rep=False)(params, batch)
+                         check_rep=False)(params, batch, schedule_id)
 
-    def step(params, opt_state, batch):
-        loss, aux, grads = synced_loss_and_grads(params, batch)
+    def _step(params, opt_state, batch, schedule_id=None):
+        loss, aux, grads = synced_loss_and_grads(params, batch, schedule_id)
         new_params, new_state, om = opt.apply(params, grads, opt_state)
         metrics = {"loss": loss, **om, **aux}
         return new_params, new_state, metrics
 
-    return step
+    if fault_runtime is None:
+        def step(params, opt_state, batch):
+            return _step(params, opt_state, batch)
+        return step
+
+    # fault-aware contract: always 4 args, even when the mesh has no DP
+    # extent (schedule_id is then accepted and ignored -- nothing to sync)
+    def fault_step(params, opt_state, batch, schedule_id):
+        return _step(params, opt_state, batch, schedule_id)
+    return fault_step

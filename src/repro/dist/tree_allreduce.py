@@ -121,6 +121,26 @@ def _dst_mask(perm, n: int, axis):
     return jnp.asarray(table)[idx]
 
 
+def run_tree_program(c, tree: TreeProgram, n: int, axis,
+                     quantize: bool = False):
+    """Reduce chunk ``c`` up ``tree`` and broadcast the total back down.
+
+    The building block shared by :func:`tree_allreduce` (uniform striping)
+    and :func:`repro.dist.fault.striped_tree_allreduce` (weighted striping
+    over a degraded tree set).
+    """
+    # reduce: every non-root sends its accumulated value to its parent
+    # exactly once, deepest level first, so parents accumulate complete
+    # subtree sums before forwarding
+    for perm in tree.reduce_rounds:
+        c = c + _send(c, axis, perm, quantize)
+    # broadcast: the root's total overwrites down the levels
+    for perm in tree.bcast_rounds:
+        recv = _send(c, axis, perm, quantize)
+        c = jnp.where(_dst_mask(perm, n, axis), recv, c)
+    return c
+
+
 def tree_allreduce(x, spec: TreeAllreduceSpec, quantize: bool = False):
     """Allreduce (sum) of the per-device array ``x`` over ``spec.axes``.
 
@@ -139,19 +159,8 @@ def tree_allreduce(x, spec: TreeAllreduceSpec, quantize: bool = False):
         flat = jnp.pad(flat, (0, pad))
     chunks = flat.reshape(spec.k, -1)
 
-    outs = []
-    for j, tree in enumerate(spec.trees):
-        c = chunks[j]
-        # reduce: every non-root sends its accumulated value to its parent
-        # exactly once, deepest level first, so parents accumulate complete
-        # subtree sums before forwarding
-        for perm in tree.reduce_rounds:
-            c = c + _send(c, axis, perm, quantize)
-        # broadcast: the root's total overwrites down the levels
-        for perm in tree.bcast_rounds:
-            recv = _send(c, axis, perm, quantize)
-            c = jnp.where(_dst_mask(perm, spec.n, axis), recv, c)
-        outs.append(c)
+    outs = [run_tree_program(chunks[j], tree, spec.n, axis, quantize)
+            for j, tree in enumerate(spec.trees)]
 
     out = jnp.concatenate(outs) if spec.k > 1 else outs[0]
     if pad:

@@ -1,5 +1,6 @@
-"""Elastic rescaling: resume a checkpoint onto a DIFFERENT mesh and rebuild
-the EDST collective schedule for the new fabric.
+"""Elastic rescaling + failure drills: resume a checkpoint onto a DIFFERENT
+mesh, rebuild the EDST collective schedule for the new fabric, and exercise
+the precompiled failure-class schedules end to end.
 
 The two halves of elasticity here:
   * parameters/optimizer state: checkpoints store fully-gathered host
@@ -11,19 +12,32 @@ The two halves of elasticity here:
     gets a fresh maximal packing via the paper's constructions (or
     Roskind-Tarjan on an irregular residual fabric).
 
+``failure_drill`` is the third half :-) -- the driver-side loop for
+:mod:`repro.dist.fault`: inject link failures into the DP fabric, pick the
+recovery schedule (a scalar id flip, no retrace), verify every chosen
+program with the packet-level simulator, and report effective allreduce
+bandwidth before/after each event and after the Roskind-Tarjan rebuild.
+
     python -m repro.launch.elastic --ckpt-dir /tmp/ck \
         --from-mesh 4,4 --to-mesh 2,8 --arch smollm-135m --reduced
+    python -m repro.launch.elastic --failure-drill --to-mesh 4,4 --events 3
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
+import numpy as np
 
 from repro import configs
 from repro.ckpt import latest_step, restore
+from repro.core.collectives import CostModel
+from repro.core.fault import FailureEvent
 from repro.dist import sharding as shd
-from repro.dist.steps import dp_axes_of, edst_spec_for_mesh
+from repro.dist.fault import NoScheduleError
+from repro.dist.steps import (dp_axes_of, edst_spec_for_mesh,
+                              fault_runtime_for_mesh)
 from repro.models.api import build
 from repro.optim import AdamW, cosine_schedule
 
@@ -57,14 +71,80 @@ def rebuild_schedule(mesh, dp_torus_shape=None):
                               tuple(mesh.axis_names), dp_torus_shape)
 
 
+def failure_drill(runtime, n_events: int = 3, nbytes: float = 64 << 20,
+                  seed: int = 0, cost_model: CostModel | None = None) -> dict:
+    """Inject ``n_events`` seeded single-link failures into the fabric,
+    observe the runtime's recovery choice after each, and report effective
+    bandwidth: healthy -> degraded/rebuilt per event.
+
+    Each chosen schedule is validated with the packet-level simulator
+    (``repro.core.collectives.simulate_allreduce``), so the drill runs on
+    any host -- no devices needed; the shard_map execution path of the same
+    programs is covered by tests/test_fault_runtime_jax.py.
+    """
+    cm = cost_model or CostModel()
+    rng = np.random.RandomState(seed)
+    healthy_bw = runtime.effective_bandwidth(nbytes, 0, cm)
+    report = {"n": runtime.graph.n, "k": runtime.k, "nbytes": nbytes,
+              "healthy_gbps": round(healthy_bw / 1e9, 3), "events": []}
+    tree_links = sorted(set().union(
+        *(ts.tree for ts in runtime.entries[0].sched.trees)))
+    for i in range(n_events):
+        link = tree_links[rng.randint(len(tree_links))]
+        event = FailureEvent(links=frozenset({link}))
+        rec = {"event": i, "dead_link": list(link)}
+        try:
+            rt = runtime.on_failure(event)          # precompiled: id flip only
+            deg = runtime.on_failure(event, prefer="degraded")
+            rec.update({
+                "schedule": rt.entry.name, "schedule_id": rt.active,
+                "k": rt.entry.k,
+                "depth": rt.entry.depth,
+                "sim_ok": rt.verify_entry(rt.active),
+                "gbps": round(rt.effective_bandwidth(nbytes, rt.active, cm)
+                              / 1e9, 3),
+                "degraded_gbps": round(
+                    deg.effective_bandwidth(nbytes, deg.active, cm) / 1e9, 3),
+            })
+        except NoScheduleError:                     # dynamic repack
+            rt = runtime.with_rebuild(event)
+            rec.update({
+                "schedule": "with_rebuild", "schedule_id": 0, "k": rt.k,
+                "depth": rt.entry.depth,
+                "sim_ok": rt.verify_entry(0),
+                "gbps": round(rt.effective_bandwidth(nbytes, 0, cm) / 1e9, 3),
+            })
+        rec["bw_retained"] = round(rec["gbps"] * 1e9 / healthy_bw, 3)
+        report["events"].append(rec)
+    return report
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--to-mesh", required=True)
+    ap.add_argument("--failure-drill", action="store_true",
+                    help="no checkpoint: build the elastic EDST runtime for "
+                         "the DP fabric of --to-mesh, inject failures, "
+                         "report recovery + bandwidth as JSON")
+    ap.add_argument("--events", type=int, default=3)
+    ap.add_argument("--nbytes", type=int, default=64 << 20)
     args = ap.parse_args(argv)
 
+    if args.failure_drill:
+        dims = tuple(int(x) for x in args.to_mesh.split(","))
+        runtime = fault_runtime_for_mesh((int(np.prod(dims)), 1),
+                                         ("data", "model"),
+                                         dp_torus_shape=dims)
+        report = failure_drill(runtime, n_events=args.events,
+                               nbytes=args.nbytes)
+        print(json.dumps(report, indent=2))
+        return report
+
+    if args.ckpt_dir is None:
+        ap.error("--ckpt-dir is required unless --failure-drill")
     cfg = configs.get(args.arch)
     if args.reduced:
         cfg = cfg.reduced()

@@ -1,0 +1,222 @@
+"""Fault-tolerance machinery: core.fault invariants and the dist.fault
+elastic runtime's pure-Python layer (fast unit tier; the shard_map
+execution path is covered by tests/test_fault_runtime_jax.py)."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.core import topologies as topo
+from repro.core.collectives import allreduce_schedule, simulate_allreduce
+from repro.core.edst_star import star_edsts
+from repro.core.fault import (FailureEvent, FaultTolerantAllreduce,
+                              rebalance_chunks, rebuild_edsts,
+                              surviving_trees)
+from repro.core.graph import (edges_are_spanning_tree,
+                              pairwise_edge_disjoint)
+from repro.dist.fault import (FaultAwareAllreduce, NoScheduleError,
+                              chunk_sizes)
+
+pytestmark = pytest.mark.unit
+
+
+def _fabric(dims=(4, 4)):
+    sp = topo.device_topology(dims)
+    return sp.product(), star_edsts(sp).trees
+
+
+# ---------------------------------------------------------------------------
+# core.fault
+# ---------------------------------------------------------------------------
+
+def test_rebuild_edsts_preserves_edge_disjointness():
+    g, trees = _fabric()
+    rng = np.random.RandomState(0)
+    edges = sorted(g.edges)
+    for trial in range(5):
+        kill = {edges[i] for i in rng.choice(len(edges), size=3,
+                                             replace=False)}
+        rebuilt, residual = rebuild_edsts(g, kill)
+        assert pairwise_edge_disjoint(rebuilt)
+        for t in rebuilt:
+            assert edges_are_spanning_tree(g.n, t)
+            assert not set(t) & kill, "rebuilt tree uses a dead link"
+            assert set(t) <= residual.edges
+
+
+def test_rebuild_edsts_on_disconnected_residual_returns_empty():
+    g, _ = _fabric()
+    # kill every link of node 0: residual cannot span
+    kill = {tuple(sorted((0, w))) for w in g.adj()[0]}
+    rebuilt, residual = rebuild_edsts(g, kill)
+    assert rebuilt == []
+    assert not residual.is_connected()
+
+
+def test_rebalance_chunks_conserves_mass():
+    g, trees = _fabric()
+    sched = allreduce_schedule(g.n, trees)
+    for delays in ({}, {3: 4.0}, {0: 2.0, 7: 8.0}):
+        fracs = rebalance_chunks(sched, delays)
+        assert len(fracs) == sched.k
+        assert all(f >= 0 for f in fracs)
+        assert abs(sum(fracs) - 1.0) < 1e-9
+    # weighted striping conserves total chunk bytes exactly
+    for delays in ({}, {5: 16.0}):
+        fracs = rebalance_chunks(sched, delays)
+        for total in (64, 1 << 20, (1 << 20) + 13):
+            assert sum(chunk_sizes(total, fracs)) == total
+
+
+def test_on_failure_matches_simulator_on_4x4_torus():
+    g, trees = _fabric((4, 4))
+    sched = allreduce_schedule(g.n, trees)
+    fta = FaultTolerantAllreduce(g, sched)
+    vals = np.random.RandomState(0).randn(g.n, 4)
+    assert simulate_allreduce(fta.schedule, vals).ok
+
+    dead = next(iter(trees[0]))
+    fta2 = fta.on_failure(FailureEvent(links=frozenset({dead})))
+    assert fta2.k == len(trees) - 1
+    keep = surviving_trees(trees, {dead})
+    assert [ts.tree for ts in fta2.schedule.trees] == \
+        [frozenset(t) for t in keep]
+    vals2 = np.random.RandomState(1).randn(g.n, fta2.k * 3)
+    assert simulate_allreduce(fta2.schedule, vals2).ok
+
+
+# ---------------------------------------------------------------------------
+# dist.fault: precompiled failure classes
+# ---------------------------------------------------------------------------
+
+def test_chunk_sizes_partition_exactly():
+    for total in (1, 7, 103, 1024):
+        for fracs in ((1.0,), (0.5, 0.5), (0.7, 0.3), (0.4, 0.35, 0.25),
+                      (0.0, 1.0)):
+            sizes = chunk_sizes(total, fracs)
+            assert sum(sizes) == total
+            assert all(s >= 0 for s in sizes)
+            if total >= len(fracs):
+                for s, f in zip(sizes, fracs):
+                    assert f > 0 or s == 0, "retired tree got traffic"
+
+
+def test_entry_layout_and_validity():
+    g, trees = _fabric()
+    rt = FaultAwareAllreduce.build(g, trees, ("data",))
+    k = len(trees)
+    assert rt.k == k
+    assert len(rt.entries) == 2 * k + 1
+    assert rt.entries[0].name == "full" and rt.entries[0].k == k
+    for j in range(k):
+        deg = rt.entries[1 + j]
+        assert deg.k == k - 1
+        # degraded/rebuilt class j is valid for EVERY link of tree j
+        for link in trees[j]:
+            ev = FailureEvent(links=frozenset({link}))
+            valid = rt.valid_ids(ev)
+            assert 1 + j in valid
+            assert 1 + k + j in valid
+            assert 0 not in valid
+    for e in rt.entries:
+        assert abs(sum(e.fractions) - 1.0) < 1e-9
+        assert rt.verify_entry(rt.entries.index(e))
+
+
+def test_on_failure_switches_id_without_rebuilding():
+    g, trees = _fabric()
+    rt = FaultAwareAllreduce.build(g, trees, ("data",))
+    link = next(iter(trees[1]))
+    rt2 = rt.on_failure(FailureEvent(links=frozenset({link})))
+    assert rt2.entries is rt.entries  # same precompiled programs
+    assert rt2.entry.name.endswith("tree1")
+    assert not rt2.entry.uses_link({link})
+    rt3 = rt.on_failure(FailureEvent(links=frozenset({link})),
+                        prefer="degraded")
+    assert rt3.entry.name == "degraded/tree1"
+    assert rt3.entry.k == len(trees) - 1
+
+
+def test_spare_link_failure_keeps_full_schedule():
+    g, trees = _fabric((2, 16))  # ring-ish fabric with spare links
+    used = set().union(*trees)
+    spare = sorted(g.edges - used)
+    if not spare:
+        pytest.skip("no spare links on this fabric")
+    rt = FaultAwareAllreduce.build(g, trees, ("data",))
+    rt2 = rt.on_failure(FailureEvent(links=frozenset({spare[0]})))
+    assert rt2.entry.k == rt.k  # nothing lost
+
+
+def test_multi_tree_failure_escalates_to_dynamic_rebuild():
+    g, trees = _fabric()
+    rt = FaultAwareAllreduce.build(g, trees, ("data",))
+    # hit every precompiled program: one dead link from each entry's trees
+    links = frozenset(next(iter(e.sched.trees[0].tree)) for e in rt.entries)
+    ev = FailureEvent(links=links)
+    with pytest.raises(NoScheduleError):
+        rt.on_failure(ev)
+    rt2 = rt.with_rebuild(ev)
+    assert rt2.k >= 1
+    dead = ev.dead_links(g)
+    for ts in rt2.entries[0].sched.trees:
+        assert not set(ts.tree) & dead
+    assert rt2.verify_entry(0)
+
+
+def test_node_failure_raises_toward_elastic_rescale():
+    g, trees = _fabric()
+    rt = FaultAwareAllreduce.build(g, trees, ("data",))
+    with pytest.raises(NoScheduleError):
+        rt.on_failure(FailureEvent(nodes=frozenset({3})))
+
+
+def test_failure_drill_reports_recovery():
+    from repro.launch.elastic import failure_drill
+    g, trees = _fabric()
+    rt = FaultAwareAllreduce.build(g, trees, ("data",))
+    rep = failure_drill(rt, n_events=2, nbytes=1 << 20, seed=0)
+    assert rep["k"] == len(trees) and rep["healthy_gbps"] > 0
+    assert len(rep["events"]) == 2
+    for ev in rep["events"]:
+        assert ev["sim_ok"]
+        assert ev["k"] >= 1
+        assert 0 < ev["bw_retained"] <= 1.0
+        assert ev["gbps"] >= ev.get("degraded_gbps", 0)
+
+
+def test_fault_sweep_report_coverage():
+    from benchmarks.fault_sweep import run_sweep
+    tops = (("torus-4x4", lambda: topo.torus([4, 4])),
+            ("slimfly-q5", lambda: topo.slimfly(5)),
+            ("polarstar-q3-qr5", lambda: topo.polarstar(3, "qr", 5)))
+    rep = run_sweep(nbytes=1 << 20, trials=1, topologies=tops,
+                    failure_counts=(0, 1, 2))
+    assert len(rep["topologies"]) >= 3
+    for t in rep["topologies"]:
+        assert {r["failures"] for r in t["sweep"]} >= {0, 1, 2}
+        assert t["healthy"]["gbps"] > 0
+        for row in t["sweep"]:
+            stages = {s["stage"]: s for s in row["stages"]}
+            assert stages["degraded"]["k"] <= t["k"]
+            # bandwidth degrades with lost trees (gbps can exceed healthy
+            # only in the latency-dominated regime when the deepest tree is
+            # the one lost, so compare tree counts, not gbps)
+            if row["residual_connected"]:
+                assert stages["rebuilt"]["k"] >= stages["degraded"]["k"]
+                assert stages["rebuilt"]["gbps"] > 0
+
+
+def test_effective_bandwidth_degrades_gracefully():
+    g, trees = _fabric()
+    rt = FaultAwareAllreduce.build(g, trees, ("data",))
+    nbytes = 64 << 20
+    full = rt.effective_bandwidth(nbytes, 0)
+    deg = rt.effective_bandwidth(nbytes, 1)
+    assert full > deg > 0, "degraded mode should lose, not zero, bandwidth"
+    rep = rt.report(nbytes)
+    assert len(rep["entries"]) == len(rt.entries)
+    assert rep["entries"][0]["gbps"] == pytest.approx(full / 1e9)
