@@ -1,0 +1,172 @@
+"""Allreduce executor + schedule-compiler benchmark (the repo's perf
+trajectory for the hot collective).
+
+Two families of entries:
+
+  * ``exec/<fabric>/<engine>`` -- wall-clock of one allreduce on 16 fake
+    host devices, comparing the fused global-round executor against the
+    per-tree baseline chains and ``jax.lax.psum``, with and without int8
+    quantization, on the (4,4) and (2,8) torus DP fabrics;
+  * ``compile/<fabric>/<center>`` -- schedule-compile time of the
+    depth-minimizing root search: the CSR double-BFS center
+    (``repro.core.csr``) against the historical O(n^2) every-vertex
+    probe, on the paper's diameter-2/3 fabrics (Slim Fly, PolarStar) and
+    a 1024-node torus.
+
+Every entry lands in ``BENCH_allreduce.json`` with the schema
+``name -> {us_per_call, bytes, k, depth}`` so successive PRs can append
+to the perf trajectory.
+
+    PYTHONPATH=src python -m benchmarks.allreduce_bench
+    PYTHONPATH=src python -m benchmarks.allreduce_bench --quick --out BENCH_allreduce.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+# 16 fake host devices; must be set before jax initializes the backend
+_FORCE = "--xla_force_host_platform_device_count=16"
+if _FORCE not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " "
+                               + _FORCE).strip()
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+import repro.dist  # noqa: E402  (installs compat shard_map)
+from repro.core import topologies as topo  # noqa: E402
+from repro.core.collectives import (allreduce_schedule,  # noqa: E402
+                                    _best_root_probe,
+                                    fused_spec_from_schedule, tree_schedule)
+from repro.core.csr import tree_center  # noqa: E402
+from repro.core.edst_star import star_edsts  # noqa: E402
+from repro.dist.tree_allreduce import (fused_tree_allreduce,  # noqa: E402
+                                       per_tree_allreduce,
+                                       spec_from_schedule)
+
+EXEC_FABRICS = (("torus4x4", (4, 4)), ("torus2x8", (2, 8)))
+COMPILE_FABRICS = (
+    ("torus32x32", lambda: topo.device_topology((32, 32))),   # n = 1024
+    ("slimfly_q7", lambda: topo.slimfly(7)),                  # n = 98
+    ("polarstar_er3_qr5", lambda: topo.polarstar(3, "qr", 5)),  # n = 65
+)
+
+
+def _time_call(fn, iters: int) -> float:
+    fn()  # warmup (compile)
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_executors(results: dict, elems: int, iters: int) -> None:
+    mesh = jax.make_mesh((16,), ("data",))
+    x = (jnp.arange(16 * elems, dtype=jnp.float32).reshape(16, elems)
+         * 1e-4)
+    nbytes = elems * 4
+
+    for label, dims in EXEC_FABRICS:
+        sp = topo.device_topology(dims)
+        sched = allreduce_schedule(sp.n, star_edsts(sp).trees)
+        fspec = fused_spec_from_schedule(sched, ("data",))
+        lspec = spec_from_schedule(sched, ("data",))
+
+        def run(body):
+            f = jax.jit(jax.shard_map(
+                lambda xs: body(xs.reshape(xs.shape[1:]))[None],
+                mesh=mesh, in_specs=P("data"), out_specs=P("data")))
+            return _time_call(lambda: jax.block_until_ready(f(x)), iters)
+
+        cases = {
+            "fused": lambda v: fused_tree_allreduce(v, fspec),
+            "per_tree": lambda v: per_tree_allreduce(v, lspec),
+            "fused_q8": lambda v: fused_tree_allreduce(v, fspec,
+                                                       quantize=True),
+            "per_tree_q8": lambda v: per_tree_allreduce(v, lspec,
+                                                        quantize=True),
+            "psum": lambda v: jax.lax.psum(v, "data"),
+        }
+        for engine, body in cases.items():
+            sec = run(body)
+            results[f"exec/{label}/{engine}"] = {
+                "us_per_call": round(sec * 1e6, 1),
+                "bytes": nbytes,
+                "k": sched.k,
+                "depth": 0 if engine == "psum" else sched.depth,
+            }
+
+
+def bench_compile(results: dict, iters: int) -> None:
+    for label, mk in COMPILE_FABRICS:
+        sp = mk()
+        g = sp.product()
+        tree = sorted(g.bfs_tree(0))
+        n = g.n
+
+        csr_sec = _time_call(lambda: tree_center(n, tree), iters)
+        probe_sec = _time_call(lambda: _best_root_probe(n, tree),
+                               max(1, iters // 4))
+        root_csr, depth_csr = tree_center(n, tree)
+        assert root_csr == _best_root_probe(n, tree), label
+        # full-schedule compile with the CSR center (what callers pay)
+        sched_sec = _time_call(lambda: tree_schedule(n, tree), iters)
+
+        for center, sec in (("csr_center", csr_sec),
+                            ("probe_center", probe_sec),
+                            ("schedule_csr", sched_sec)):
+            results[f"compile/{label}/{center}"] = {
+                "us_per_call": round(sec * 1e6, 1),
+                "bytes": 0,
+                "k": 1,
+                "depth": depth_csr,
+            }
+
+
+def run_bench(quick: bool = False) -> dict:
+    elems = 4096 if quick else 16384
+    iters = 5 if quick else 20
+    results: dict = {}
+    bench_executors(results, elems, iters)
+    bench_compile(results, 2 if quick else 5)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default="BENCH_allreduce.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller payloads / fewer iters (CI smoke)")
+    args = ap.parse_args()
+
+    results = run_bench(args.quick)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+        f.write("\n")
+
+    width = max(len(k) for k in results)
+    for name, row in results.items():
+        print(f"{name:<{width}}  {row['us_per_call']:>10.1f} us  "
+              f"k={row['k']} depth={row['depth']} bytes={row['bytes']}")
+    for label, _ in EXEC_FABRICS:
+        fused = results[f"exec/{label}/fused"]
+        per_tree = results[f"exec/{label}/per_tree"]
+        if fused["k"] >= 2:
+            print(f"{label}: fused/per_tree = "
+                  f"{fused['us_per_call'] / per_tree['us_per_call']:.2f}x")
+    big = "torus32x32"
+    speedup = (results[f"compile/{big}/probe_center"]["us_per_call"]
+               / results[f"compile/{big}/csr_center"]["us_per_call"])
+    print(f"{big}: probe/csr center speedup = {speedup:.0f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,11 +2,16 @@
 roofline summary (from dry-run artifacts when present).
 
     PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run --json BENCH_tables.json
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows; ``--json`` additionally
+writes the same rows as ``name -> {us_per_call, derived}`` so they can
+join the ``BENCH_*.json`` perf trajectory.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import sys
 
@@ -17,12 +22,20 @@ from benchmarks.table_benchmarks import ALL  # noqa: E402
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as JSON to PATH")
+    args = ap.parse_args()
+
+    rows = {}
     print("name,us_per_call,derived")
     failures = 0
     for fn in ALL:
         try:
             for name, sec, derived in fn():
                 print(f"{name},{sec * 1e6:.1f},{derived}")
+                rows[name] = {"us_per_call": round(sec * 1e6, 1),
+                              "derived": derived}
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{fn.__name__},ERROR,{e!r}")
@@ -34,6 +47,10 @@ def main() -> None:
     except FileNotFoundError:
         print("roofline,skipped,run `python -m repro.launch.dryrun --all "
               "--out dryrun_single_pod.json` first")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+            f.write("\n")
     if failures:
         sys.exit(1)
 

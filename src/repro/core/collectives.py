@@ -16,6 +16,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from .csr import tree_center
 from .graph import canon, tree_depth_levels
 
 
@@ -47,15 +48,23 @@ def tree_schedule(n: int, tree, root: int | None = None) -> TreeSchedule:
 
 
 def _best_root(n: int, tree) -> int:
-    """Root minimizing tree depth (a tree center)."""
+    """Root minimizing tree depth (a tree center), O(n) via the CSR
+    double-BFS in :mod:`repro.core.csr` (three sweeps instead of the old
+    every-vertex probe, which was O(n^2) and dominated schedule compiles
+    on >= 1000-node fabrics)."""
+    return tree_center(n, tree)[0]
+
+
+def _best_root_probe(n: int, tree) -> int:
+    """The historical O(n^2) every-vertex BFS probe.  Kept as the
+    regression oracle for :func:`_best_root` (identical roots/depths are
+    asserted in tests) and as the baseline timed by
+    ``benchmarks/allreduce_bench.py``."""
     best, best_d = 0, 10**9
-    # probing every vertex is O(n^2); fine for <= few-thousand-node fabrics
     adj: dict = {}
     for u, v in tree:
         adj.setdefault(u, []).append(v)
         adj.setdefault(v, []).append(u)
-
-    from collections import deque
 
     def depth_from(r):
         seen = {r}
@@ -124,6 +133,139 @@ def allreduce_schedule(n: int, trees, roots=None) -> AllreduceSchedule:
                                   for t, r in zip(trees, roots)])
     assert sched.check_contention_free(), "trees share a link"
     return sched
+
+
+# ---------------------------------------------------------------------------
+# fused global-round program (the executor-facing compiled form)
+# ---------------------------------------------------------------------------
+#
+# ``AllreduceSchedule`` is tree-major: tree j's rounds, then tree j+1's.
+# Executed literally that is sum-of-all-trees serial hops.  The fused form
+# is round-major: global round r carries round r of EVERY tree, and each
+# global round is split into the fewest ppermute-legal waves (unique
+# sources and destinations per wave) over the *union* of the trees'
+# messages.  Because a wave's sources are unique, every sender ships
+# exactly one tree's chunk, so one ppermute moves several trees' traffic
+# at once -- the wire bytes are unchanged (edge-disjointness: each message
+# still crosses its own link) but the collective count drops from
+# sum-of-trees rounds to depth-of-deepest-tree waves.
+#
+# Per wave the compiler precomputes (n,)-shaped NumPy tables consumed by
+# ``repro.dist.tree_allreduce.fused_tree_allreduce`` at trace time:
+# ``send_row[v]`` = which chunk row vertex v ships, ``recv_row[v]`` /
+# ``recv_flag[v]`` = where an arriving payload lands (and whether one
+# arrives at all).  Nothing is rebuilt per call.
+
+@dataclass(frozen=True, eq=False)
+class FusedRound:
+    """One ppermute-legal wave of a global round."""
+    perm: tuple            # ((src, dst), ...) unique srcs, unique dsts
+    send_row: np.ndarray   # (n,) int32: chunk row vertex v sends
+    recv_row: np.ndarray   # (n,) int32: chunk row an arrival lands in
+    recv_flag: np.ndarray  # (n,) bool: does vertex v receive this wave
+
+
+@dataclass(frozen=True, eq=False)
+class FusedAllreduceSpec:
+    """Round-major allreduce program with precomputed per-wave tables.
+
+    Hash/equality follow ``key`` (fabric size, axis names, rooted tree
+    sets), so two compiles of the same (topology, axes) -- which
+    :func:`fused_spec_from_schedule` also caches to the same object --
+    never retrace a jitted executor that takes the spec statically.
+    """
+    n: int
+    k: int
+    axes: tuple            # mesh axis names the allreduce runs over
+    depth: int             # deepest tree's level count
+    reduce_rounds: tuple   # tuple[FusedRound], deepest level first
+    bcast_rounds: tuple    # tuple[FusedRound], root level first
+    key: tuple
+
+    @property
+    def num_collectives(self) -> int:
+        """ppermutes one allreduce issues (1 per wave, quantized or not)."""
+        return len(self.reduce_rounds) + len(self.bcast_rounds)
+
+    def __hash__(self):
+        return hash(self.key)
+
+    def __eq__(self, other):
+        return (isinstance(other, FusedAllreduceSpec)
+                and self.key == other.key)
+
+
+def _split_tagged(msgs):
+    """Greedily split one global round's (tree, src, dst) messages into
+    waves with unique sources and unique destinations (ppermute-legal)."""
+    out, remaining = [], list(msgs)
+    while remaining:
+        srcs, dsts, taken, rest = set(), set(), [], []
+        for m in remaining:
+            _, s, d = m
+            if s in srcs or d in dsts:
+                rest.append(m)
+            else:
+                srcs.add(s)
+                dsts.add(d)
+                taken.append(m)
+        out.append(taken)
+        remaining = rest
+    return out
+
+
+def _fused_round(n: int, taken) -> FusedRound:
+    send_row = np.zeros(n, np.int32)
+    recv_row = np.zeros(n, np.int32)
+    recv_flag = np.zeros(n, bool)
+    perm = []
+    for j, s, d in taken:
+        perm.append((s, d))
+        send_row[s] = j
+        recv_row[d] = j
+        recv_flag[d] = True
+    return FusedRound(tuple(perm), send_row, recv_row, recv_flag)
+
+
+def _sched_key(sched: AllreduceSchedule, axes: tuple) -> tuple:
+    return (sched.n, axes, tuple((ts.root, ts.tree) for ts in sched.trees))
+
+
+_FUSED_CACHE: dict = {}
+
+
+def fused_spec_from_schedule(sched: AllreduceSchedule,
+                             axis_names) -> FusedAllreduceSpec:
+    """Compile an :class:`AllreduceSchedule` into the round-major
+    :class:`FusedAllreduceSpec`.  Compiles are cached by (fabric, rooted
+    trees, axes): repeated calls for the same topology return the *same*
+    object, keeping jit caches stable."""
+    axes = tuple(axis_names)
+    key = _sched_key(sched, axes)
+    hit = _FUSED_CACHE.get(key)
+    if hit is not None:
+        return hit
+    phases = {}
+    for phase in ("reduce", "bcast"):
+        rounds = []
+        for msgs in sched.global_rounds(phase):
+            rounds.extend(_fused_round(sched.n, wave)
+                          for wave in _split_tagged(msgs))
+        phases[phase] = tuple(rounds)
+    spec = FusedAllreduceSpec(n=sched.n, k=sched.k, axes=axes,
+                              depth=sched.depth,
+                              reduce_rounds=phases["reduce"],
+                              bcast_rounds=phases["bcast"], key=key)
+    _FUSED_CACHE[key] = spec
+    return spec
+
+
+def empty_fused_spec(n: int, axis_names) -> FusedAllreduceSpec:
+    """The k=0 program (no trees survive): executor passes data through."""
+    axes = tuple(axis_names)
+    return FusedAllreduceSpec(n=n, k=0, axes=axes, depth=0,
+                              reduce_rounds=(), bcast_rounds=(),
+                              key=(n, axes, ()))
 
 
 # ---------------------------------------------------------------------------

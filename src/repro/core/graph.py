@@ -28,6 +28,7 @@ class Graph:
             if not (0 <= u < self.n and 0 <= v < self.n):
                 raise ValueError(f"edge {(u, v)} out of range n={self.n}")
         self._adj = None
+        self._csr = None
 
     # -- basic accessors ----------------------------------------------------
     @property
@@ -42,6 +43,15 @@ class Graph:
                 a[v].append(u)
             self._adj = a
         return self._adj
+
+    def csr(self):
+        """CSR adjacency (:class:`repro.core.csr.CSRAdjacency`), cached;
+        the linear-time representation behind ``diameter`` and the
+        schedule compiler's center finding."""
+        if self._csr is None:
+            from .csr import CSRAdjacency
+            self._csr = CSRAdjacency.from_edges(self.n, self.edges)
+        return self._csr
 
     def degree(self, v: int) -> int:
         return len(self.adj()[v])
@@ -93,21 +103,13 @@ class Graph:
         return tree
 
     def diameter(self) -> int:
-        """Exact diameter via n BFS passes (small graphs only)."""
-        adj = self.adj()
+        """Exact diameter via n CSR-BFS passes (each pass O(n + m))."""
+        csr = self.csr()
         best = 0
         for s in range(self.n):
-            dist = [-1] * self.n
-            dist[s] = 0
-            dq = deque([s])
-            while dq:
-                u = dq.popleft()
-                for w in adj[u]:
-                    if dist[w] < 0:
-                        dist[w] = dist[u] + 1
-                        dq.append(w)
-            d = max(dist)
-            if d < 0:
+            dist = csr.bfs_distances(s)
+            d = int(dist.max())
+            if (dist < 0).any():
                 return -1  # disconnected
             best = max(best, d)
         return best

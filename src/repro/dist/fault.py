@@ -37,12 +37,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.collectives import (AllreduceSchedule, CostModel,
-                                allreduce_schedule, simulate_allreduce)
+                                FusedAllreduceSpec, allreduce_schedule,
+                                empty_fused_spec, fused_spec_from_schedule,
+                                simulate_allreduce)
 from ..core.edst_rt import max_edsts
 from ..core.fault import FailureEvent, rebalance_chunks
 from ..core.graph import Graph, canon
-from .tree_allreduce import (TreeAllreduceSpec, _axis_arg, run_tree_program,
-                             spec_from_schedule)
+from .tree_allreduce import chunk_sizes, fused_tree_allreduce  # noqa: F401  (chunk_sizes re-exported)
 
 
 class NoScheduleError(RuntimeError):
@@ -59,7 +60,7 @@ class NoScheduleError(RuntimeError):
 class ScheduleEntry:
     """One precompiled failure-class program."""
     name: str                      # "full" | "degraded/tree<j>" | "rebuilt/tree<j>"
-    spec: TreeAllreduceSpec        # ppermute-legal rounds (static)
+    spec: FusedAllreduceSpec       # fused global-round program (static)
     fractions: tuple               # per-tree chunk fractions, sum 1
     sched: AllreduceSchedule | None  # core schedule (cost model / simulator)
 
@@ -77,52 +78,28 @@ class ScheduleEntry:
         return any(set(ts.tree) & dead_links for ts in self.sched.trees)
 
 
-def chunk_sizes(total: int, fractions) -> tuple:
-    """Apportion ``total`` elements to trees by largest-remainder rounding;
-    sizes sum exactly to ``total`` (a retired tree -- fraction 0 -- gets 0)."""
-    raw = [f * total for f in fractions]
-    sizes = [int(np.floor(r)) for r in raw]
-    leftover = total - sum(sizes)
-    order = sorted(range(len(raw)), key=lambda i: (sizes[i] - raw[i], i))
-    for i in order[:leftover]:
-        sizes[i] += 1
-    return tuple(sizes)
-
-
-def striped_tree_allreduce(x, spec: TreeAllreduceSpec, fractions,
+def striped_tree_allreduce(x, spec: FusedAllreduceSpec, fractions,
                            quantize: bool = False):
     """Weighted-stripe k-tree allreduce: contiguous slice j of the flattened
     array (``chunk_sizes(size, fractions)[j]`` elements) travels tree j.
 
-    Unlike :func:`repro.dist.tree_allreduce.tree_allreduce`'s uniform
-    striping this needs no padding -- slices are unequal but exact -- and a
-    fraction-0 tree is skipped entirely (retired straggler / dead tree).
+    The fused global-round engine runs the unequal slices padded to a
+    common row width, so degraded (k-1)-striping shares the healthy
+    program's wave structure.
     """
     if spec.k == 0:
         return x
-    axis = _axis_arg(spec)
-    shape, dtype = x.shape, x.dtype
-    flat = x.reshape(-1)
-    sizes = chunk_sizes(flat.size, fractions)
-    outs, off = [], 0
-    for tree, sz in zip(spec.trees, sizes):
-        if sz == 0:
-            continue
-        c = run_tree_program(flat[off:off + sz], tree, spec.n, axis, quantize)
-        outs.append(c)
-        off += sz
-    out = jnp.concatenate(outs) if len(outs) > 1 else outs[0]
-    return out.reshape(shape).astype(dtype)
+    return fused_tree_allreduce(x, spec, quantize, fractions=fractions)
 
 
 def _entry(name: str, n: int, trees, axes) -> ScheduleEntry:
     trees = [frozenset(canon(*e) for e in t) for t in trees]
     if not trees:
-        return ScheduleEntry(name, TreeAllreduceSpec(n=n, axes=tuple(axes),
-                                                     trees=()), (), None)
+        return ScheduleEntry(name, empty_fused_spec(n, axes), (), None)
     sched = allreduce_schedule(n, trees)
     fracs = tuple(rebalance_chunks(sched, {}))
-    return ScheduleEntry(name, spec_from_schedule(sched, axes), fracs, sched)
+    return ScheduleEntry(name, fused_spec_from_schedule(sched, axes), fracs,
+                         sched)
 
 
 # ---------------------------------------------------------------------------

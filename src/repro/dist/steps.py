@@ -30,6 +30,8 @@ maximal packing where the flat view would see only a 16-ring).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -37,12 +39,13 @@ from jax.flatten_util import ravel_pytree
 from jax.sharding import PartitionSpec as P
 
 from ..core import topologies as topo
-from ..core.collectives import allreduce_schedule
+from ..core.collectives import (FusedAllreduceSpec, allreduce_schedule,
+                                fused_spec_from_schedule)
 from ..core.edst_star import star_edsts
 from . import sharding as shd
 from .compat import shard_map
 from .fault import FaultAwareAllreduce
-from .tree_allreduce import TreeAllreduceSpec, spec_from_schedule, tree_allreduce
+from .tree_allreduce import tree_allreduce
 
 SYNC_MODES = ("gspmd", "psum_dp", "edst")
 
@@ -87,13 +90,23 @@ def dp_fabric_for_mesh(mesh_shape, axis_names, dp_torus_shape=None):
     return topo.device_topology(phys), names
 
 
-def edst_spec_for_mesh(mesh_shape, axis_names,
-                       dp_torus_shape=None) -> TreeAllreduceSpec:
-    """EDST allreduce spec for the data-parallel fabric of a device mesh
-    (see :func:`dp_fabric_for_mesh` for the fabric choice)."""
+@functools.lru_cache(maxsize=None)
+def _edst_spec_cached(mesh_shape, axis_names, dp_torus_shape):
     sp, names = dp_fabric_for_mesh(mesh_shape, axis_names, dp_torus_shape)
     sched = allreduce_schedule(sp.n, star_edsts(sp).trees)
-    return spec_from_schedule(sched, names)
+    return fused_spec_from_schedule(sched, names)
+
+
+def edst_spec_for_mesh(mesh_shape, axis_names,
+                       dp_torus_shape=None) -> FusedAllreduceSpec:
+    """Fused EDST allreduce spec for the data-parallel fabric of a device
+    mesh (see :func:`dp_fabric_for_mesh` for the fabric choice).  Specs
+    are cached by (topology, axes): repeated calls -- every train-step
+    build, every elastic rescale probe -- return the same object, so
+    jitted executors taking the spec statically never retrace."""
+    return _edst_spec_cached(
+        tuple(mesh_shape), tuple(axis_names),
+        None if dp_torus_shape is None else tuple(dp_torus_shape))
 
 
 def fault_runtime_for_mesh(mesh_shape, axis_names,

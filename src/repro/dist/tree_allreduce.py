@@ -1,13 +1,22 @@
 """k-tree allreduce under ``shard_map`` (the paper's Sec. 1.1 payoff, run).
 
-``repro.core.collectives.allreduce_schedule`` turns a set of k edge-disjoint
-spanning trees into per-tree reduce (leaves->root) and broadcast
-(root->leaves) rounds over *vertex ids*.  ``spec_from_schedule`` compiles
-those rounds into a static :class:`TreeAllreduceSpec` keyed to mesh axis
-names; ``tree_allreduce`` executes the spec inside a ``shard_map`` body with
-``jax.lax.ppermute``, striping the (flattened) gradient into k chunks --
-chunk j travels tree j, so the k trees use disjoint physical links and run
-concurrently.
+Two executors share this module:
+
+  * the **fused global-round** executor (:func:`fused_tree_allreduce`, the
+    default engine) consumes a :class:`repro.core.collectives.
+    FusedAllreduceSpec`: gradient chunks live stacked as a ``(k, m)``
+    array and every global round issues one ``ppermute`` per *wave* over
+    the union of all k trees' messages -- depth-of-deepest-tree rounds of
+    concurrent tree traffic instead of sum-of-all-trees serial hops.
+    Per-wave routing tables (which chunk row a vertex ships, where an
+    arrival lands) are precomputed NumPy constants in the spec, and
+    on-device accumulation of arrivals runs through the
+    ``repro.kernels.tree_combine`` Pallas op;
+  * the **per-tree** executor (:func:`run_tree_program`, via a
+    :class:`TreeAllreduceSpec`) lowers each tree as its own serial
+    ppermute chain.  It is kept as the A/B baseline
+    (``benchmarks/allreduce_bench.py``) and for weighted striping over
+    retired trees.
 
 Vertex ids are the row-major flattened index over the mesh axes being
 reduced (``jax.lax.axis_index(axes)``), which matches how
@@ -15,8 +24,13 @@ reduced (``jax.lax.axis_index(axes)``), which matches how
 
 ``ppermute`` needs unique sources *and* destinations per call, so schedule
 rounds that fan in (several children -> one parent) or fan out (one parent
--> several children) are statically split into sub-rounds here; the tree
+-> several children) are statically split into sub-rounds/waves; the tree
 semantics are unchanged (reduction is associative, broadcast idempotent).
+
+With ``quantize=True`` every hop ships int8 chunks with the per-chunk f32
+scale bit-packed into a 4-byte payload tail, so a quantized hop is ONE
+collective (it used to be two: payload + scale) at ~4x fewer wire bytes
+for f32 gradients.
 """
 from __future__ import annotations
 
@@ -24,10 +38,14 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from ..core.collectives import FusedAllreduceSpec
+from ..kernels.tree_combine.ops import combine
 
 
 # ---------------------------------------------------------------------------
-# static spec
+# static spec (per-tree baseline form)
 # ---------------------------------------------------------------------------
 
 @dataclass(frozen=True)
@@ -82,7 +100,9 @@ def _compile_rounds(rounds):
 
 def spec_from_schedule(sched, axis_names) -> TreeAllreduceSpec:
     """Compile an :class:`repro.core.collectives.AllreduceSchedule` into a
-    static spec bound to the given mesh axis names."""
+    static per-tree spec bound to the given mesh axis names.  (The fused
+    round-major form comes from
+    :func:`repro.core.collectives.fused_spec_from_schedule`.)"""
     trees = tuple(
         TreeProgram(root=ts.root,
                     reduce_rounds=_compile_rounds(ts.reduce_rounds),
@@ -92,25 +112,58 @@ def spec_from_schedule(sched, axis_names) -> TreeAllreduceSpec:
 
 
 # ---------------------------------------------------------------------------
-# execution (inside shard_map)
+# chunk apportioning (shared by uniform and weighted striping)
 # ---------------------------------------------------------------------------
 
-def _axis_arg(spec: TreeAllreduceSpec):
+def chunk_sizes(total: int, fractions) -> tuple:
+    """Apportion ``total`` elements to trees by largest-remainder rounding;
+    sizes sum exactly to ``total`` (a retired tree -- fraction 0 -- gets 0)."""
+    raw = [f * total for f in fractions]
+    sizes = [int(np.floor(r)) for r in raw]
+    leftover = total - sum(sizes)
+    order = sorted(range(len(raw)), key=lambda i: (sizes[i] - raw[i], i))
+    for i in order[:leftover]:
+        sizes[i] += 1
+    return tuple(sizes)
+
+
+# ---------------------------------------------------------------------------
+# wire format (shared by both executors)
+# ---------------------------------------------------------------------------
+
+def _axis_arg(spec):
     return spec.axes[0] if len(spec.axes) == 1 else tuple(spec.axes)
+
+
+def _pack_q8(x):
+    """Quantize a chunk to int8 and bit-pack its f32 scale into a 4-byte
+    tail, so the whole hop is one ppermute payload."""
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    tail = jax.lax.bitcast_convert_type(scale.astype(jnp.float32), jnp.int8)
+    return jnp.concatenate([q, tail])
+
+
+def _unpack_q8(p, dtype):
+    """Inverse of :func:`_pack_q8`.  A device nobody sent to holds zeros:
+    the zero-bit scale dequantizes it back to exact zeros."""
+    scale = jax.lax.bitcast_convert_type(p[-4:], jnp.float32)
+    return p[:-4].astype(dtype) * scale.astype(dtype)
 
 
 def _send(x, axis, perm, quantize: bool):
     """ppermute a chunk; devices nobody sends to receive zeros.  With
-    ``quantize`` the payload travels as int8 with a per-chunk f32 scale
-    (two collectives), cutting wire bytes 4x for f32 gradients."""
+    ``quantize`` the payload travels as int8 with the f32 scale packed in
+    its tail -- one collective per hop, 4x fewer wire bytes for f32."""
     if not quantize:
         return jax.lax.ppermute(x, axis, list(perm))
-    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    q_r = jax.lax.ppermute(q, axis, list(perm))
-    s_r = jax.lax.ppermute(scale.astype(jnp.float32), axis, list(perm))
-    return q_r.astype(x.dtype) * s_r.astype(x.dtype)
+    p_r = jax.lax.ppermute(_pack_q8(x), axis, list(perm))
+    return _unpack_q8(p_r, x.dtype)
 
+
+# ---------------------------------------------------------------------------
+# per-tree execution (inside shard_map) -- the A/B baseline
+# ---------------------------------------------------------------------------
 
 def _dst_mask(perm, n: int, axis):
     """Traced bool: is this device a destination of ``perm``?"""
@@ -125,9 +178,10 @@ def run_tree_program(c, tree: TreeProgram, n: int, axis,
                      quantize: bool = False):
     """Reduce chunk ``c`` up ``tree`` and broadcast the total back down.
 
-    The building block shared by :func:`tree_allreduce` (uniform striping)
-    and :func:`repro.dist.fault.striped_tree_allreduce` (weighted striping
-    over a degraded tree set).
+    The per-tree building block: tree j's whole chain completes before
+    tree j+1 starts in program order.  Kept for the executor A/B
+    benchmark and for striping with retired (fraction-0) trees; the fused
+    executor below is the default engine.
     """
     # reduce: every non-root sends its accumulated value to its parent
     # exactly once, deepest level first, so parents accumulate complete
@@ -141,14 +195,9 @@ def run_tree_program(c, tree: TreeProgram, n: int, axis,
     return c
 
 
-def tree_allreduce(x, spec: TreeAllreduceSpec, quantize: bool = False):
-    """Allreduce (sum) of the per-device array ``x`` over ``spec.axes``.
-
-    Must run inside a ``shard_map`` whose manual axes include ``spec.axes``.
-    ``x`` is flattened, zero-padded to a multiple of k and split into k
-    chunks; chunk j is reduced up and broadcast down tree j.  Returns the
-    summed array in the original shape (replicated across the fabric).
-    """
+def per_tree_allreduce(x, spec: TreeAllreduceSpec, quantize: bool = False):
+    """Allreduce (sum) of ``x`` over ``spec.axes``, one serial ppermute
+    chain per tree (the pre-fusion executor)."""
     if spec.k == 0:
         return x
     axis = _axis_arg(spec)
@@ -166,3 +215,131 @@ def tree_allreduce(x, spec: TreeAllreduceSpec, quantize: bool = False):
     if pad:
         out = out[:-pad]
     return out.reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused global-round execution (inside shard_map) -- the default engine
+# ---------------------------------------------------------------------------
+
+def _wave_rows(rnd):
+    """Static (senders' rows, receivers' rows) of one wave.  Single-row
+    waves (every message from the same tree -- common, since fan-in
+    splits produce them) specialize to static indexing below."""
+    srcs = np.array([s for s, _ in rnd.perm], np.int64)
+    dsts = np.array([d for _, d in rnd.perm], np.int64)
+    return (np.unique(rnd.send_row[srcs]), np.unique(rnd.recv_row[dsts]))
+
+
+def _fused_send(chunks, rnd, idx, axis, quantize: bool):
+    """One wave: every vertex ships the chunk row its table says, the
+    single ppermute moves all trees' round-r traffic at once, and the
+    receive tables say where (and whether) the arrival lands."""
+    send_rows, recv_rows = _wave_rows(rnd)
+    if len(send_rows) == 1:
+        payload = chunks[int(send_rows[0])]
+    else:
+        payload = chunks[jnp.asarray(rnd.send_row)[idx]]
+    if quantize:
+        payload = _pack_q8(payload)
+    recv = jax.lax.ppermute(payload, axis, list(rnd.perm))
+    if quantize:
+        recv = _unpack_q8(recv, chunks.dtype)
+    flag = jnp.asarray(rnd.recv_flag)[idx]
+    return recv, flag, recv_rows
+
+
+def fused_tree_allreduce(x, spec: FusedAllreduceSpec, quantize: bool = False,
+                         fractions=None):
+    """Allreduce (sum) of the per-device array ``x`` over ``spec.axes``
+    with the fused global-round program.
+
+    Must run inside a ``shard_map`` whose manual axes include
+    ``spec.axes``.  ``x`` is flattened and striped into k chunk rows
+    (uniform split, or ``chunk_sizes(size, fractions)`` when weighted
+    striping is requested); rows are padded to a common width so the
+    stacked ``(k, m)`` state ships through shared waves.  Returns the
+    summed array in the original shape (replicated across the fabric).
+    """
+    if spec.k == 0 or x.size == 0:
+        return x
+    if fractions is not None and len(fractions) != spec.k:
+        raise ValueError(f"{len(fractions)} fractions for k={spec.k} trees; "
+                         "spec and striping must come from the same schedule")
+    axis = _axis_arg(spec)
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1)
+    k = spec.k
+    if fractions is None:
+        m = -(-flat.size // k)
+        sizes = (m,) * k
+        chunks = jnp.pad(flat, (0, m * k - flat.size)).reshape(k, m)
+    else:
+        sizes = chunk_sizes(flat.size, fractions)
+        m = max(sizes)
+        rows, off = [], 0
+        for s in sizes:
+            c = flat[off:off + s]
+            off += s
+            rows.append(c if s == m else jnp.pad(c, (0, m - s)))
+        chunks = jnp.stack(rows)
+
+    idx = jax.lax.axis_index(axis)
+    rows_iota = jnp.arange(k)
+
+    # reduce accumulation: the tree_combine kernel accumulates in f32
+    # (on-chip on TPU), which is what gradient payloads (f32/bf16/f16)
+    # want; wider or integer dtypes, where f32 would round, add natively
+    if chunks.dtype in (jnp.float32, jnp.bfloat16, jnp.float16):
+        def acc(partial, update):
+            return combine(update[None, :], partial)
+    else:
+        def acc(partial, update):
+            return partial + update
+
+    # reduce: arrivals accumulate into their tree's row.  Single-row
+    # waves combine just that row; multi-row waves scatter the arrival to
+    # a one-hot (k, m) contribution first.
+    for rnd in spec.reduce_rounds:
+        recv, flag, recv_rows = _fused_send(chunks, rnd, idx, axis, quantize)
+        masked = jnp.where(flag, recv, jnp.zeros_like(recv))
+        if len(recv_rows) == 1:
+            r0 = int(recv_rows[0])
+            chunks = chunks.at[r0].set(acc(chunks[r0], masked))
+        else:
+            row = jnp.asarray(rnd.recv_row)[idx]
+            contrib = (rows_iota == row).astype(chunks.dtype)[:, None] \
+                * masked[None, :]
+            chunks = acc(chunks.reshape(-1),
+                         contrib.reshape(-1)).reshape(k, m)
+
+    # broadcast: arrivals overwrite their tree's row on destinations
+    for rnd in spec.bcast_rounds:
+        recv, flag, recv_rows = _fused_send(chunks, rnd, idx, axis, quantize)
+        if len(recv_rows) == 1:
+            r0 = int(recv_rows[0])
+            chunks = chunks.at[r0].set(jnp.where(flag, recv, chunks[r0]))
+        else:
+            row = jnp.asarray(rnd.recv_row)[idx]
+            sel = ((rows_iota == row) & flag)[:, None]
+            chunks = jnp.where(sel, recv[None, :], chunks)
+
+    if fractions is None:
+        out = chunks.reshape(-1)[:flat.size]
+    else:
+        parts = [chunks[j, :s] for j, s in enumerate(sizes) if s > 0]
+        out = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+    return out.reshape(shape).astype(dtype)
+
+
+def tree_allreduce(x, spec, quantize: bool = False):
+    """Allreduce (sum) of the per-device array ``x`` over ``spec.axes``.
+
+    Dispatches on the spec form: a
+    :class:`repro.core.collectives.FusedAllreduceSpec` runs the fused
+    global-round engine, a :class:`TreeAllreduceSpec` the per-tree
+    baseline chains.  Both return the summed array in the original shape
+    (replicated across the fabric).
+    """
+    if isinstance(spec, FusedAllreduceSpec):
+        return fused_tree_allreduce(x, spec, quantize)
+    return per_tree_allreduce(x, spec, quantize)

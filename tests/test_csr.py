@@ -1,0 +1,166 @@
+"""CSR adjacency / double-BFS center regression and the fused global-round
+compiler's invariants (fast unit tier; the executor runs under shard_map in
+tests/test_fused_allreduce_jax.py)."""
+import numpy as np
+import pytest
+
+from repro.core import topologies as topo
+from repro.core.collectives import (_best_root, _best_root_probe,
+                                    allreduce_schedule,
+                                    fused_spec_from_schedule, tree_schedule)
+from repro.core.csr import CSRAdjacency, tree_center
+from repro.core.edst_star import star_edsts
+from repro.core.graph import Graph, tree_depth_levels
+from repro.dist.tree_allreduce import spec_from_schedule
+
+pytestmark = pytest.mark.unit
+
+
+# ---------------------------------------------------------------------------
+# CSR adjacency + BFS
+# ---------------------------------------------------------------------------
+
+def _ref_bfs(g: Graph, root: int):
+    from collections import deque
+    dist = [-1] * g.n
+    dist[root] = 0
+    dq = deque([root])
+    adj = g.adj()
+    while dq:
+        u = dq.popleft()
+        for w in adj[u]:
+            if dist[w] < 0:
+                dist[w] = dist[u] + 1
+                dq.append(w)
+    return dist
+
+
+def test_csr_bfs_matches_reference_on_random_graphs():
+    rng = np.random.RandomState(0)
+    for trial in range(10):
+        n = int(rng.randint(2, 40))
+        edges = {tuple(sorted(e)) for e in
+                 rng.randint(0, n, size=(2 * n, 2)) if e[0] != e[1]}
+        g = Graph(n, edges)
+        csr = g.csr()
+        for root in range(0, n, max(1, n // 4)):
+            assert csr.bfs_distances(root).tolist() == _ref_bfs(g, root)
+
+
+def test_csr_from_edges_degrees():
+    g = topo.device_topology((4, 4)).product()
+    csr = CSRAdjacency.from_edges(g.n, g.edges)
+    assert csr.degrees.tolist() == [g.degree(v) for v in range(g.n)]
+    for v in range(g.n):
+        assert sorted(csr.neighbors(v).tolist()) == sorted(g.adj()[v])
+
+
+def test_diameter_still_exact_via_csr():
+    assert topo.device_topology((4, 4)).product().diameter() == 4
+    assert topo.slimfly(5).product().diameter() == 2
+
+
+# ---------------------------------------------------------------------------
+# double-BFS center == the historical O(n^2) probe (regression)
+# ---------------------------------------------------------------------------
+
+PAPER_FABRICS = (
+    lambda: topo.device_topology((4, 4)),
+    lambda: topo.device_topology((2, 8)),
+    lambda: topo.device_topology((8, 8)),
+    lambda: topo.slimfly(5),
+    lambda: topo.polarstar(3, "qr", 5),
+)
+
+
+def test_tree_center_matches_probe_on_paper_edsts():
+    """The CSR double-BFS root must be bit-identical to the old
+    every-vertex probe (same vertex, same depth) on the EDSTs of the
+    paper's factor/product graphs -- schedules must not shift."""
+    for mk in PAPER_FABRICS:
+        sp = mk()
+        for tree in star_edsts(sp).trees:
+            root_csr, depth_csr = tree_center(sp.n, tree)
+            root_probe = _best_root_probe(sp.n, tree)
+            assert root_csr == root_probe
+            assert depth_csr == len(tree_depth_levels(tree, root_probe))
+            assert _best_root(sp.n, tree) == root_probe
+
+
+def test_tree_center_on_paths_and_stars():
+    # path 0-1-...-7: center = 3 (first of the two middles), depth 4
+    path = [(i, i + 1) for i in range(7)]
+    assert tree_center(8, path) == (3, 4)
+    # star around 5: center = 5, depth 1
+    star = [(5, v) for v in range(5)]
+    assert tree_center(6, star) == (5, 1)
+    # singleton
+    assert tree_center(1, []) == (0, 0)
+
+
+# ---------------------------------------------------------------------------
+# fused global-round compiler
+# ---------------------------------------------------------------------------
+
+def _sched_for(dims):
+    sp = topo.device_topology(dims)
+    return allreduce_schedule(sp.n, star_edsts(sp).trees)
+
+
+@pytest.mark.parametrize("dims", [(4, 4), (2, 8), (2, 4, 4)])
+def test_fused_waves_are_ppermute_legal_and_conserve_messages(dims):
+    sched = _sched_for(dims)
+    spec = fused_spec_from_schedule(sched, ("data",))
+    for phase, rounds in (("reduce", spec.reduce_rounds),
+                          ("bcast", spec.bcast_rounds)):
+        sent = []
+        for rnd in rounds:
+            srcs = [s for s, _ in rnd.perm]
+            dsts = [d for _, d in rnd.perm]
+            assert len(set(srcs)) == len(srcs), "duplicate src in wave"
+            assert len(set(dsts)) == len(dsts), "duplicate dst in wave"
+            for s, d in rnd.perm:
+                j = int(rnd.send_row[s])
+                assert int(rnd.recv_row[d]) == j, "send/recv row mismatch"
+                assert bool(rnd.recv_flag[d])
+                sent.append((j, s, d))
+        want = [m for msgs in sched.global_rounds(phase) for m in msgs]
+        assert sorted(sent) == sorted(want), f"{phase} messages differ"
+
+
+def test_fused_wave_count_beats_per_tree_rounds():
+    """The fused program's collective count is depth-of-deepest-tree
+    waves, strictly below the per-tree sum for k >= 2 fabrics."""
+    sched = _sched_for((4, 4))
+    assert sched.k >= 2
+    spec = fused_spec_from_schedule(sched, ("data",))
+    legacy = spec_from_schedule(sched, ("data",))
+    legacy_rounds = sum(len(t.reduce_rounds) + len(t.bcast_rounds)
+                        for t in legacy.trees)
+    assert spec.num_collectives < legacy_rounds
+    # k = 1: nothing to fuse, counts coincide
+    sched1 = _sched_for((2, 8))
+    assert sched1.k == 1
+    spec1 = fused_spec_from_schedule(sched1, ("data",))
+    legacy1 = spec_from_schedule(sched1, ("data",))
+    assert spec1.num_collectives == sum(
+        len(t.reduce_rounds) + len(t.bcast_rounds) for t in legacy1.trees)
+
+
+def test_fused_spec_cache_returns_identical_objects():
+    """Two independently built (but equal) schedules compile to the SAME
+    spec object -- jit caches keyed on the static spec stay stable."""
+    a = fused_spec_from_schedule(_sched_for((4, 4)), ("data",))
+    b = fused_spec_from_schedule(_sched_for((4, 4)), ("data",))
+    assert a is b
+    assert a == b and hash(a) == hash(b)
+    c = fused_spec_from_schedule(_sched_for((4, 4)), ("dp",))
+    assert c is not a and c != a
+
+
+def test_edst_spec_for_mesh_cached_across_arg_spellings():
+    from repro.dist.steps import edst_spec_for_mesh
+    s1 = edst_spec_for_mesh((16, 1), ("data", "model"), dp_torus_shape=(4, 4))
+    s2 = edst_spec_for_mesh([16, 1], ["data", "model"], dp_torus_shape=[4, 4])
+    assert s1 is s2
+    assert s1.k == 2
