@@ -4,9 +4,13 @@ trajectory for the hot collective).
 Two families of entries:
 
   * ``exec/<fabric>/<engine>`` -- wall-clock of one allreduce on 16 fake
-    host devices, comparing the fused global-round executor against the
-    per-tree baseline chains and ``jax.lax.psum``, with and without int8
-    quantization, on the (4,4) and (2,8) torus DP fabrics;
+    host devices: the pipelined segmented engine (the default; plus its
+    S in {1,2,4,8} segment sweep and the ``segments="auto"`` pick, which
+    the row records), the fused global-round and per-tree baselines, and
+    ``jax.lax.psum``, each with and without the int8 wire, on the (4,4)
+    and (2,8) torus DP fabrics.  Cases are timed *interleaved* (every
+    engine once per block, best block wins) so slow drift on shared CI
+    hosts cannot skew one engine's row;
   * ``compile/<fabric>/<center>`` -- schedule-compile time of the
     depth-minimizing root search: the CSR double-BFS center
     (``repro.core.csr``) against the historical O(n^2) every-vertex
@@ -14,11 +18,14 @@ Two families of entries:
     a 1024-node torus.
 
 Every entry lands in ``BENCH_allreduce.json`` with the schema
-``name -> {us_per_call, bytes, k, depth}`` so successive PRs can append
-to the perf trajectory.
+``name -> {us_per_call, bytes, k, depth, [segments], [codec]}`` so
+successive PRs can append to the perf trajectory.
+``BENCH_allreduce_quick.json`` is the committed ``--quick`` twin:
+``benchmarks/bench_diff.py`` gates CI against it (psum-normalized,
+same-payload rows only).
 
     PYTHONPATH=src python -m benchmarks.allreduce_bench
-    PYTHONPATH=src python -m benchmarks.allreduce_bench --quick --out BENCH_allreduce.json
+    PYTHONPATH=src python -m benchmarks.allreduce_bench --quick --out BENCH_allreduce_quick.json
 """
 from __future__ import annotations
 
@@ -44,14 +51,19 @@ import repro.dist  # noqa: E402  (installs compat shard_map)
 from repro.core import topologies as topo  # noqa: E402
 from repro.core.collectives import (allreduce_schedule,  # noqa: E402
                                     _best_root_probe,
-                                    fused_spec_from_schedule, tree_schedule)
+                                    fused_spec_from_schedule,
+                                    pipelined_spec_from_schedule,
+                                    tree_schedule)
 from repro.core.csr import tree_center  # noqa: E402
 from repro.core.edst_star import star_edsts  # noqa: E402
-from repro.dist.tree_allreduce import (fused_tree_allreduce,  # noqa: E402
+from repro.dist.tree_allreduce import (auto_segments,  # noqa: E402
+                                       fused_tree_allreduce,
                                        per_tree_allreduce,
-                                       spec_from_schedule)
+                                       pipelined_tree_allreduce,
+                                       resolve_codec, spec_from_schedule)
 
 EXEC_FABRICS = (("torus4x4", (4, 4)), ("torus2x8", (2, 8)))
+SEGMENT_SWEEP = (1, 2, 4, 8)
 COMPILE_FABRICS = (
     ("torus32x32", lambda: topo.device_topology((32, 32))),   # n = 1024
     ("slimfly_q7", lambda: topo.slimfly(7)),                  # n = 98
@@ -68,6 +80,23 @@ def _time_call(fn, iters: int) -> float:
     return (time.perf_counter() - t0) / iters
 
 
+def _time_interleaved(fns: dict, rounds: int) -> dict:
+    """Best single-call wall clock per case over ``rounds`` round-robin
+    sweeps.  Interleaving one call at a time spreads host-machine drift
+    over every engine alike (consecutive same-engine blocks let a slow
+    patch skew one row), and the min discards contention outliers."""
+    for fn in fns.values():
+        fn()  # compile
+        fn()
+    best = {name: float("inf") for name in fns}
+    for _ in range(rounds):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            fn()
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return best
+
+
 def bench_executors(results: dict, elems: int, iters: int) -> None:
     mesh = jax.make_mesh((16,), ("data",))
     x = (jnp.arange(16 * elems, dtype=jnp.float32).reshape(16, elems)
@@ -77,32 +106,67 @@ def bench_executors(results: dict, elems: int, iters: int) -> None:
     for label, dims in EXEC_FABRICS:
         sp = topo.device_topology(dims)
         sched = allreduce_schedule(sp.n, star_edsts(sp).trees)
+        pspec = pipelined_spec_from_schedule(sched, ("data",))
         fspec = fused_spec_from_schedule(sched, ("data",))
         lspec = spec_from_schedule(sched, ("data",))
+        mrow = -(-elems // max(1, sched.k))
+        auto_s = auto_segments(pspec, mrow)
+        codec = resolve_codec()
 
-        def run(body):
+        def jitted(body):
             f = jax.jit(jax.shard_map(
                 lambda xs: body(xs.reshape(xs.shape[1:]))[None],
                 mesh=mesh, in_specs=P("data"), out_specs=P("data")))
-            return _time_call(lambda: jax.block_until_ready(f(x)), iters)
+            return lambda: jax.block_until_ready(f(x))
 
         cases = {
+            "pipelined": lambda v: pipelined_tree_allreduce(v, pspec),
             "fused": lambda v: fused_tree_allreduce(v, fspec),
             "per_tree": lambda v: per_tree_allreduce(v, lspec),
-            "fused_q8": lambda v: fused_tree_allreduce(v, fspec,
-                                                       quantize=True),
-            "per_tree_q8": lambda v: per_tree_allreduce(v, lspec,
-                                                        quantize=True),
             "psum": lambda v: jax.lax.psum(v, "data"),
         }
-        for engine, body in cases.items():
-            sec = run(body)
-            results[f"exec/{label}/{engine}"] = {
+        if codec != "off":
+            cases.update({
+                "pipelined_q8": lambda v: pipelined_tree_allreduce(
+                    v, pspec, quantize=True),
+                "fused_q8": lambda v: fused_tree_allreduce(v, fspec,
+                                                           quantize=True),
+                "per_tree_q8": lambda v: per_tree_allreduce(v, lspec,
+                                                            quantize=True),
+            })
+        # the S>1 scan issues every wave each step -- two orders of
+        # magnitude slower on serialized-collective hosts (that IS the
+        # datapoint) -- so the sweep times in its own group to keep the
+        # headline engine rows' round-robin tight
+        sweep = {f"pipelined_s{s}":
+                 (lambda v, s=s: pipelined_tree_allreduce(v, pspec,
+                                                          segments=s))
+                 for s in SEGMENT_SWEEP}
+
+        timed = _time_interleaved({n: jitted(b) for n, b in cases.items()},
+                                  iters)
+        if codec == "off":
+            # the model-disabled codec compiles the IDENTICAL program as
+            # f32 (resolve_codec docstring), so the q8 rows share their
+            # counterpart's measurement rather than re-timing the same
+            # executable into measurement noise
+            for eng in ("pipelined", "fused", "per_tree"):
+                timed[f"{eng}_q8"] = timed[eng]
+        timed.update(_time_interleaved(
+            {n: jitted(b) for n, b in sweep.items()}, max(2, iters // 6)))
+        for engine, sec in timed.items():
+            row = {
                 "us_per_call": round(sec * 1e6, 1),
                 "bytes": nbytes,
                 "k": sched.k,
                 "depth": 0 if engine == "psum" else sched.depth,
             }
+            if engine.startswith("pipelined"):
+                row["segments"] = (int(engine.rsplit("_s", 1)[1])
+                                   if "_s" in engine else auto_s)
+            if engine.endswith("_q8"):
+                row["codec"] = codec
+            results[f"exec/{label}/{engine}"] = row
 
 
 def bench_compile(results: dict, iters: int) -> None:
@@ -133,7 +197,7 @@ def bench_compile(results: dict, iters: int) -> None:
 
 def run_bench(quick: bool = False) -> dict:
     elems = 4096 if quick else 16384
-    iters = 5 if quick else 20
+    iters = 12 if quick else 42
     results: dict = {}
     bench_executors(results, elems, iters)
     bench_compile(results, 2 if quick else 5)
@@ -154,14 +218,22 @@ def main() -> None:
 
     width = max(len(k) for k in results)
     for name, row in results.items():
+        extra = "".join(f" {key}={row[key]}" for key in ("segments", "codec")
+                        if key in row)
         print(f"{name:<{width}}  {row['us_per_call']:>10.1f} us  "
-              f"k={row['k']} depth={row['depth']} bytes={row['bytes']}")
+              f"k={row['k']} depth={row['depth']} bytes={row['bytes']}"
+              f"{extra}")
     for label, _ in EXEC_FABRICS:
-        fused = results[f"exec/{label}/fused"]
-        per_tree = results[f"exec/{label}/per_tree"]
-        if fused["k"] >= 2:
-            print(f"{label}: fused/per_tree = "
-                  f"{fused['us_per_call'] / per_tree['us_per_call']:.2f}x")
+        rows = {e: results[f"exec/{label}/{e}"]["us_per_call"]
+                for e in ("pipelined", "pipelined_q8", "fused", "fused_q8",
+                          "per_tree", "per_tree_q8", "psum")}
+        print(f"{label}: fused/pipelined = "
+              f"{rows['fused'] / rows['pipelined']:.2f}x   "
+              f"psum/pipelined = {rows['psum'] / rows['pipelined']:.2f}x")
+        for eng in ("pipelined", "fused", "per_tree"):
+            flag = "OK" if rows[f"{eng}_q8"] <= rows[eng] else "REGRESSION"
+            print(f"  {eng}_q8 vs {eng}: "
+                  f"{rows[f'{eng}_q8'] / rows[eng]:.2f}x [{flag}]")
     big = "torus32x32"
     speedup = (results[f"compile/{big}/probe_center"]["us_per_call"]
                / results[f"compile/{big}/csr_center"]["us_per_call"])

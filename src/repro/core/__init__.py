@@ -1,8 +1,9 @@
 """Core library: the paper's star-product EDST theory + collective schedules."""
 from .collectives import (AllreduceSchedule, CostModel, FusedAllreduceSpec,
-                          TreeSchedule, allreduce_schedule,
-                          fused_spec_from_schedule, simulate_allreduce,
-                          tree_schedule)
+                          PipelinedAllreduceSpec, TreeSchedule,
+                          allreduce_schedule, fused_spec_from_schedule,
+                          pipelined_spec_from_schedule, simulate_allreduce,
+                          simulate_wave_program, tree_schedule)
 from .csr import CSRAdjacency, tree_center
 from .edst_rt import max_edsts, pack_forests
 from .edst_star import (StarEDSTs, maximal_edsts, one_sided_edsts,
@@ -16,9 +17,12 @@ from .topologies import (bundlefly, device_topology, edst_set_for, hyperx,
                          mesh_nd, polarstar, slimfly, torus)
 
 __all__ = [
-    "AllreduceSchedule", "CostModel", "FusedAllreduceSpec", "TreeSchedule",
-    "allreduce_schedule", "fused_spec_from_schedule", "simulate_allreduce",
-    "tree_schedule", "CSRAdjacency", "tree_center", "max_edsts",
+    "AllreduceSchedule", "CostModel", "FusedAllreduceSpec",
+    "PipelinedAllreduceSpec", "TreeSchedule",
+    "allreduce_schedule", "fused_spec_from_schedule",
+    "pipelined_spec_from_schedule", "simulate_allreduce",
+    "simulate_wave_program", "tree_schedule",
+    "CSRAdjacency", "tree_center", "max_edsts",
     "pack_forests",
     "StarEDSTs", "maximal_edsts", "one_sided_edsts", "property_461_edsts",
     "star_edsts", "universal_edsts", "EDSTSet", "edsts_for", "FailureEvent",

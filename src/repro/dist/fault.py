@@ -37,13 +37,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.collectives import (AllreduceSchedule, CostModel,
-                                FusedAllreduceSpec, allreduce_schedule,
-                                empty_fused_spec, fused_spec_from_schedule,
+                                FusedAllreduceSpec, PipelinedAllreduceSpec,
+                                allreduce_schedule, empty_pipelined_spec,
+                                pipelined_spec_from_schedule,
                                 simulate_allreduce)
 from ..core.edst_rt import max_edsts
 from ..core.fault import FailureEvent, rebalance_chunks
 from ..core.graph import Graph, canon
-from .tree_allreduce import chunk_sizes, fused_tree_allreduce  # noqa: F401  (chunk_sizes re-exported)
+from .tree_allreduce import (chunk_sizes,  # noqa: F401  (re-exported)
+                             fused_tree_allreduce, pipelined_tree_allreduce)
 
 
 class NoScheduleError(RuntimeError):
@@ -60,7 +62,7 @@ class NoScheduleError(RuntimeError):
 class ScheduleEntry:
     """One precompiled failure-class program."""
     name: str                      # "full" | "degraded/tree<j>" | "rebuilt/tree<j>"
-    spec: FusedAllreduceSpec       # fused global-round program (static)
+    spec: PipelinedAllreduceSpec   # pipelined wave program (static)
     fractions: tuple               # per-tree chunk fractions, sum 1
     sched: AllreduceSchedule | None  # core schedule (cost model / simulator)
 
@@ -78,28 +80,32 @@ class ScheduleEntry:
         return any(set(ts.tree) & dead_links for ts in self.sched.trees)
 
 
-def striped_tree_allreduce(x, spec: FusedAllreduceSpec, fractions,
-                           quantize: bool = False):
+def striped_tree_allreduce(x, spec, fractions, quantize: bool = False,
+                           segments="auto"):
     """Weighted-stripe k-tree allreduce: contiguous slice j of the flattened
     array (``chunk_sizes(size, fractions)[j]`` elements) travels tree j.
 
-    The fused global-round engine runs the unequal slices padded to a
-    common row width, so degraded (k-1)-striping shares the healthy
-    program's wave structure.
+    Dispatches on the spec form (pipelined wave program by default, fused
+    round-major for A/B runs); either engine runs the unequal slices
+    padded to a common row width, so degraded (k-1)-striping shares the
+    healthy program's wave structure.
     """
     if spec.k == 0:
         return x
-    return fused_tree_allreduce(x, spec, quantize, fractions=fractions)
+    if isinstance(spec, FusedAllreduceSpec):
+        return fused_tree_allreduce(x, spec, quantize, fractions=fractions)
+    return pipelined_tree_allreduce(x, spec, quantize, segments=segments,
+                                    fractions=fractions)
 
 
 def _entry(name: str, n: int, trees, axes) -> ScheduleEntry:
     trees = [frozenset(canon(*e) for e in t) for t in trees]
     if not trees:
-        return ScheduleEntry(name, empty_fused_spec(n, axes), (), None)
+        return ScheduleEntry(name, empty_pipelined_spec(n, axes), (), None)
     sched = allreduce_schedule(n, trees)
     fracs = tuple(rebalance_chunks(sched, {}))
-    return ScheduleEntry(name, fused_spec_from_schedule(sched, axes), fracs,
-                         sched)
+    return ScheduleEntry(name, pipelined_spec_from_schedule(sched, axes),
+                         fracs, sched)
 
 
 # ---------------------------------------------------------------------------
@@ -204,19 +210,22 @@ class FaultAwareAllreduce:
 
     # -- execution ----------------------------------------------------------
 
-    def make_allreduce(self, quantize: bool = False):
+    def make_allreduce(self, quantize: bool = False, segments="auto"):
         """``allreduce(x, schedule_id)`` for use inside ``shard_map``: a
         ``jax.lax.switch`` over the precompiled programs.  Pass
         ``schedule_id`` as a traced ``jnp.int32`` scalar so every program
         compiles into the one executable and switching never retraces
-        (a Python int would constant-fold the switch away)."""
+        (a Python int would constant-fold the switch away).  ``segments``
+        streams chunks down the trees in that many pipeline segments
+        (``"auto"``: backend-calibrated cost model) -- degraded and
+        rebuilt programs pipeline exactly like the healthy one."""
         entries = self.entries
 
         def branch(e: ScheduleEntry):
             if e.k == 0:
                 return lambda v: v  # unreachable via on_failure; identity
             return lambda v: striped_tree_allreduce(v, e.spec, e.fractions,
-                                                    quantize)
+                                                    quantize, segments)
 
         branches = [branch(e) for e in entries]
 

@@ -39,8 +39,10 @@ from jax.flatten_util import ravel_pytree
 from jax.sharding import PartitionSpec as P
 
 from ..core import topologies as topo
-from ..core.collectives import (FusedAllreduceSpec, allreduce_schedule,
-                                fused_spec_from_schedule)
+from ..core.collectives import (FusedAllreduceSpec, PipelinedAllreduceSpec,
+                                allreduce_schedule,
+                                fused_spec_from_schedule,
+                                pipelined_spec_from_schedule)
 from ..core.edst_star import star_edsts
 from . import sharding as shd
 from .compat import shard_map
@@ -91,22 +93,31 @@ def dp_fabric_for_mesh(mesh_shape, axis_names, dp_torus_shape=None):
 
 
 @functools.lru_cache(maxsize=None)
-def _edst_spec_cached(mesh_shape, axis_names, dp_torus_shape):
+def _edst_spec_cached(mesh_shape, axis_names, dp_torus_shape, engine):
     sp, names = dp_fabric_for_mesh(mesh_shape, axis_names, dp_torus_shape)
     sched = allreduce_schedule(sp.n, star_edsts(sp).trees)
-    return fused_spec_from_schedule(sched, names)
+    if engine == "fused":
+        return fused_spec_from_schedule(sched, names)
+    return pipelined_spec_from_schedule(sched, names)
 
 
-def edst_spec_for_mesh(mesh_shape, axis_names,
-                       dp_torus_shape=None) -> FusedAllreduceSpec:
-    """Fused EDST allreduce spec for the data-parallel fabric of a device
-    mesh (see :func:`dp_fabric_for_mesh` for the fabric choice).  Specs
-    are cached by (topology, axes): repeated calls -- every train-step
-    build, every elastic rescale probe -- return the same object, so
-    jitted executors taking the spec statically never retrace."""
+def edst_spec_for_mesh(
+        mesh_shape, axis_names, dp_torus_shape=None,
+        engine: str = "pipelined"
+) -> PipelinedAllreduceSpec | FusedAllreduceSpec:
+    """EDST allreduce spec for the data-parallel fabric of a device mesh
+    (see :func:`dp_fabric_for_mesh` for the fabric choice).  ``engine``
+    picks the compiled form: ``"pipelined"`` (default -- the list-
+    scheduled segment-streaming wave program) or ``"fused"`` (the
+    round-aligned A/B baseline).  Specs are cached by (topology, axes,
+    engine): repeated calls -- every train-step build, every elastic
+    rescale probe -- return the same object, so jitted executors taking
+    the spec statically never retrace."""
+    if engine not in ("pipelined", "fused"):
+        raise ValueError(f"engine {engine!r} not in ('pipelined', 'fused')")
     return _edst_spec_cached(
         tuple(mesh_shape), tuple(axis_names),
-        None if dp_torus_shape is None else tuple(dp_torus_shape))
+        None if dp_torus_shape is None else tuple(dp_torus_shape), engine)
 
 
 def fault_runtime_for_mesh(mesh_shape, axis_names,
@@ -126,7 +137,8 @@ def fault_runtime_for_mesh(mesh_shape, axis_names,
 
 def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
                     grad_accum: int = 1, quantize: bool = False,
-                    dp_torus_shape=None, fault_runtime=None):
+                    dp_torus_shape=None, fault_runtime=None,
+                    segments="auto"):
     """Build the jittable train step.  See module docstring for ``mode``.
 
     ``fault_runtime`` (a :class:`repro.dist.fault.FaultAwareAllreduce`,
@@ -136,6 +148,10 @@ def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
     runtime's precompiled healthy/degraded/rebuilt programs -- the driver
     maps a failure-event stream to ids via ``fault_runtime.on_failure`` and
     flips the scalar, never triggering a retrace.
+
+    ``segments`` (``mode="edst"``) streams gradient chunks down the trees
+    in that many pipeline segments (``"auto"``: backend-calibrated cost
+    model; see :func:`repro.dist.tree_allreduce.pipelined_tree_allreduce`).
     """
     if mode not in SYNC_MODES:
         raise ValueError(f"mode {mode!r} not in {SYNC_MODES}")
@@ -153,7 +169,8 @@ def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
                 raise ValueError(
                     f"fault_runtime fabric n={fault_runtime.graph.n} != "
                     f"DP extent {ndp}; rebuild it with fault_runtime_for_mesh")
-            fault_sync = fault_runtime.make_allreduce(quantize)
+            fault_sync = fault_runtime.make_allreduce(quantize,
+                                                      segments=segments)
         else:
             tree_spec = edst_spec_for_mesh(tuple(mesh.devices.shape),
                                            tuple(mesh.axis_names),
@@ -213,7 +230,8 @@ def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
                 if fault_sync is not None:
                     flat = fault_sync(flat, sid)
                 else:
-                    flat = tree_allreduce(flat, tree_spec, quantize=quantize)
+                    flat = tree_allreduce(flat, tree_spec, quantize=quantize,
+                                          segments=segments)
                 grads = unravel(flat / ndp)
             return loss, aux, grads
 

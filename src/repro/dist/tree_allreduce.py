@@ -1,36 +1,49 @@
 """k-tree allreduce under ``shard_map`` (the paper's Sec. 1.1 payoff, run).
 
-Two executors share this module:
+Three executors share this module:
 
-  * the **fused global-round** executor (:func:`fused_tree_allreduce`, the
-    default engine) consumes a :class:`repro.core.collectives.
-    FusedAllreduceSpec`: gradient chunks live stacked as a ``(k, m)``
-    array and every global round issues one ``ppermute`` per *wave* over
-    the union of all k trees' messages -- depth-of-deepest-tree rounds of
-    concurrent tree traffic instead of sum-of-all-trees serial hops.
-    Per-wave routing tables (which chunk row a vertex ships, where an
-    arrival lands) are precomputed NumPy constants in the spec, and
-    on-device accumulation of arrivals runs through the
-    ``repro.kernels.tree_combine`` Pallas op;
+  * the **pipelined segmented** executor (:func:`pipelined_tree_allreduce`,
+    the default engine) consumes a :class:`repro.core.collectives.
+    PipelinedAllreduceSpec`: the dependency-DAG list schedule packs every
+    tree's messages -- both phases -- into the fewest ppermute-legal
+    waves, and the payload streams down the trees in S segments so wave w
+    moves segment ``t - w`` at step t.  ``segments="auto"`` picks S from
+    the :class:`repro.core.collectives.CostModel` calibrated for the
+    backend (alpha-dominated hosts unroll S=1; bandwidth-dominated
+    fabrics stream ``(waves + S - 1) * (m/S)``), and S > 1 executes as a
+    ``jax.lax.fori_loop`` over the step index so HLO size and trace time
+    stay flat in S * depth;
+  * the **fused global-round** executor (:func:`fused_tree_allreduce`)
+    consumes a :class:`repro.core.collectives.FusedAllreduceSpec`: round
+    r of every tree merged into shared waves over a stacked ``(k, m)``
+    state.  Kept as the round-aligned A/B baseline;
   * the **per-tree** executor (:func:`run_tree_program`, via a
     :class:`TreeAllreduceSpec`) lowers each tree as its own serial
-    ppermute chain.  It is kept as the A/B baseline
-    (``benchmarks/allreduce_bench.py``) and for weighted striping over
-    retired trees.
+    ppermute chain -- the original baseline.
 
 Vertex ids are the row-major flattened index over the mesh axes being
 reduced (``jax.lax.axis_index(axes)``), which matches how
 ``repro.core.topologies.device_topology`` numbers the fabric.
 
-``ppermute`` needs unique sources *and* destinations per call, so schedule
-rounds that fan in (several children -> one parent) or fan out (one parent
--> several children) are statically split into sub-rounds/waves; the tree
-semantics are unchanged (reduction is associative, broadcast idempotent).
+``ppermute`` needs unique sources *and* destinations per call, so fan-in
+and fan-out are statically split into waves by the schedule compilers;
+the tree semantics are unchanged (reduction is associative, broadcast
+idempotent).  ``ppermute`` hands devices nobody sent to a zero payload,
+which the executors exploit: a wave whose every arrival accumulates into
+one chunk row is a single unmasked add.
 
-With ``quantize=True`` every hop ships int8 chunks with the per-chunk f32
-scale bit-packed into a 4-byte payload tail, so a quantized hop is ONE
-collective (it used to be two: payload + scale) at ~4x fewer wire bytes
-for f32 gradients.
+With ``quantize=True`` hops ship int8 chunks with the per-chunk f32 scale
+bit-packed into a 4-byte payload tail (one collective per hop, ~4x fewer
+wire bytes for f32), through the fused Pallas codec in
+``repro.kernels.tree_combine``.  The codec is phase-aware: the broadcast
+phase quantizes each tree's total ONCE and forwards the packed bytes down
+the tree (one codec invocation amortized over depth hops, and a single
+quantization error instead of one per hop).  Reduce hops must re-code per
+hop (partials accumulate in f32), so their wire obeys the ``codec``
+policy: ``"full"`` compresses them too (the default where bandwidth
+dominates, i.e. real fabrics), ``"bcast"`` leaves them f32 (the default
+on alpha-dominated host backends, where per-hop codec work costs more
+than the wire bytes it saves).
 """
 from __future__ import annotations
 
@@ -40,8 +53,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.collectives import FusedAllreduceSpec
-from ..kernels.tree_combine.ops import combine
+from ..core.collectives import (CostModel, FusedAllreduceSpec,
+                                PipelinedAllreduceSpec)
+from ..kernels.tree_combine.ops import (combine, q8_combine, q8_pack,
+                                        q8_pack_rows, q8_unpack,
+                                        q8_unpack_rows)
 
 
 # ---------------------------------------------------------------------------
@@ -51,10 +67,13 @@ from ..kernels.tree_combine.ops import combine
 @dataclass(frozen=True)
 class TreeProgram:
     """One tree's rounds, each a tuple of (src, dst) pairs with unique
-    sources and destinations (ppermute-legal)."""
+    sources and destinations (ppermute-legal).  ``bcast_dst[r][v]`` is the
+    precompiled is-destination table of broadcast round r -- built once at
+    spec-compile time, not per executor call."""
     root: int
     reduce_rounds: tuple
     bcast_rounds: tuple
+    bcast_dst: tuple = ()   # tuple[tuple[bool, ...]] aligned with bcast_rounds
 
 
 @dataclass(frozen=True)
@@ -98,17 +117,29 @@ def _compile_rounds(rounds):
     return tuple(out)
 
 
+def _dst_tables(rounds, n: int):
+    out = []
+    for perm in rounds:
+        table = [False] * n
+        for _, d in perm:
+            table[d] = True
+        out.append(tuple(table))
+    return tuple(out)
+
+
 def spec_from_schedule(sched, axis_names) -> TreeAllreduceSpec:
     """Compile an :class:`repro.core.collectives.AllreduceSchedule` into a
     static per-tree spec bound to the given mesh axis names.  (The fused
-    round-major form comes from
-    :func:`repro.core.collectives.fused_spec_from_schedule`.)"""
-    trees = tuple(
-        TreeProgram(root=ts.root,
-                    reduce_rounds=_compile_rounds(ts.reduce_rounds),
-                    bcast_rounds=_compile_rounds(ts.bcast_rounds))
-        for ts in sched.trees)
-    return TreeAllreduceSpec(n=sched.n, axes=tuple(axis_names), trees=trees)
+    and pipelined forms come from ``repro.core.collectives``.)"""
+    trees = []
+    for ts in sched.trees:
+        bcast = _compile_rounds(ts.bcast_rounds)
+        trees.append(TreeProgram(root=ts.root,
+                                 reduce_rounds=_compile_rounds(ts.reduce_rounds),
+                                 bcast_rounds=bcast,
+                                 bcast_dst=_dst_tables(bcast, sched.n)))
+    return TreeAllreduceSpec(n=sched.n, axes=tuple(axis_names),
+                             trees=tuple(trees))
 
 
 # ---------------------------------------------------------------------------
@@ -128,70 +159,132 @@ def chunk_sizes(total: int, fractions) -> tuple:
 
 
 # ---------------------------------------------------------------------------
-# wire format (shared by both executors)
+# wire codec policy (shared by all executors)
 # ---------------------------------------------------------------------------
 
 def _axis_arg(spec):
     return spec.axes[0] if len(spec.axes) == 1 else tuple(spec.axes)
 
+def resolve_codec(codec=None) -> str:
+    """The quantized-wire policy:
 
-def _pack_q8(x):
-    """Quantize a chunk to int8 and bit-pack its f32 scale into a 4-byte
-    tail, so the whole hop is one ppermute payload."""
-    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    tail = jax.lax.bitcast_convert_type(scale.astype(jnp.float32), jnp.int8)
-    return jnp.concatenate([q, tail])
+      * ``"full"`` -- int8 + scale tail on every hop, through the fused
+        Pallas codec; the broadcast phase packs each tree's total ONCE
+        and forwards the wire verbatim.  4x fewer wire bytes: the
+        default where bandwidth dominates, i.e. real fabrics;
+      * ``"hybrid"`` -- bf16 reduce wires (f32 accumulation), int8
+        pack-once broadcast: 2x/4x fewer bytes at two casts per reduce
+        hop;
+      * ``"bcast"`` -- f32 reduce wires, int8 pack-once broadcast only;
+      * ``"off"`` -- no compression: ``quantize=True`` compiles the
+        identical program as ``quantize=False``.
+
+    ``"auto"`` resolves by the same calibration as the segment
+    autotuner: on alpha-dominated host backends every codec variant was
+    measured slower than shipping f32 (the per-op dispatch of
+    quantize/dequantize -- and bf16's software emulation -- costs more
+    than the wire bytes saved, at every payload size), so compression is
+    model-disabled there; bandwidth-dominated backends take ``"full"``.
+    """
+    if codec in (None, "auto"):
+        # same split as CostModel.for_backend: only the serialized-
+        # collective "cpu" host disables compression; GPU/TPU fabrics
+        # take the full int8 wire
+        return "off" if jax.default_backend() == "cpu" else "full"
+    if codec not in ("full", "hybrid", "bcast", "off"):
+        raise ValueError(f"codec {codec!r} not in "
+                         "('auto', 'full', 'hybrid', 'bcast', 'off')")
+    return codec
 
 
-def _unpack_q8(p, dtype):
-    """Inverse of :func:`_pack_q8`.  A device nobody sent to holds zeros:
-    the zero-bit scale dequantizes it back to exact zeros."""
-    scale = jax.lax.bitcast_convert_type(p[-4:], jnp.float32)
-    return p[:-4].astype(dtype) * scale.astype(dtype)
+_REDUCE_WIRE = {"full": "q8", "hybrid": "bf16", "bcast": None, "off": None}
+
+_FLOATS = (jnp.float32, jnp.bfloat16, jnp.float16)
 
 
-def _send(x, axis, perm, quantize: bool):
-    """ppermute a chunk; devices nobody sends to receive zeros.  With
-    ``quantize`` the payload travels as int8 with the f32 scale packed in
-    its tail -- one collective per hop, 4x fewer wire bytes for f32."""
-    if not quantize:
-        return jax.lax.ppermute(x, axis, list(perm))
-    p_r = jax.lax.ppermute(_pack_q8(x), axis, list(perm))
-    return _unpack_q8(p_r, x.dtype)
+def _pack_wire32(x):
+    """Quantize chunk rows into an f32-lane wire: ``(..., m) float ->
+    (..., ceil(m/4) + 1) f32`` holding the int8 payload bit-packed four
+    to a lane plus the scale lane.  The broadcast phase forwards THIS
+    form: every gather/mask op and every hop then touches 4x fewer
+    elements than the unpacked rows, and zero-filled ppermute arrivals
+    decode to exact zeros (zero scale)."""
+    m = x.shape[-1]
+    pad = -m % 4
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    w8 = q8_pack_rows(x) if x.ndim == 2 else q8_pack(x)
+    return jax.lax.bitcast_convert_type(
+        w8.reshape(*w8.shape[:-1], -1, 4), jnp.float32)
+
+
+def _unpack_wire32(w32, dtype, m):
+    """Inverse of :func:`_pack_wire32` back to ``(..., m)`` rows."""
+    w8 = jax.lax.bitcast_convert_type(w32, jnp.int8)
+    w8 = w8.reshape(*w8.shape[:-2], -1)
+    out = q8_unpack_rows(w8, dtype) if w8.ndim == 2 else q8_unpack(w8, dtype)
+    return out[..., :m]
+
+
+def _acc(partial, update):
+    """Reduce accumulation: through the Pallas tree-combine (f32 on-chip
+    accumulation) for float gradients on TPU, a plain add elsewhere."""
+    if jax.default_backend() == "tpu" and partial.dtype in (
+            jnp.float32, jnp.bfloat16, jnp.float16):
+        return combine(update[None, :], partial)
+    return partial + update
+
+
+def _send(x, axis, perm, wire=None):
+    """ppermute a chunk; devices nobody sends to receive zeros.  ``wire``
+    compresses the hop: ``"q8"`` ships int8 with the f32 scale packed in
+    its tail (one collective per hop, 4x fewer bytes for f32), ``"bf16"``
+    casts on and off the wire (2x fewer bytes).  Integer payloads always
+    travel verbatim -- compression would corrupt them."""
+    if wire is not None and x.dtype not in _FLOATS:
+        wire = None
+    if wire == "q8":
+        w = jax.lax.ppermute(q8_pack(x), axis, list(perm))
+        return q8_unpack(w, x.dtype)
+    if wire == "bf16":
+        return jax.lax.ppermute(x.astype(jnp.bfloat16), axis,
+                                list(perm)).astype(x.dtype)
+    return jax.lax.ppermute(x, axis, list(perm))
 
 
 # ---------------------------------------------------------------------------
 # per-tree execution (inside shard_map) -- the A/B baseline
 # ---------------------------------------------------------------------------
 
-def _dst_mask(perm, n: int, axis):
-    """Traced bool: is this device a destination of ``perm``?"""
-    table = [False] * n
-    for _, d in perm:
-        table[d] = True
-    idx = jax.lax.axis_index(axis)
-    return jnp.asarray(table)[idx]
-
-
 def run_tree_program(c, tree: TreeProgram, n: int, axis,
-                     quantize: bool = False):
+                     quantize: bool = False, codec=None):
     """Reduce chunk ``c`` up ``tree`` and broadcast the total back down.
 
     The per-tree building block: tree j's whole chain completes before
     tree j+1 starts in program order.  Kept for the executor A/B
-    benchmark and for striping with retired (fraction-0) trees; the fused
-    executor below is the default engine.
+    benchmark; the pipelined executor below is the default engine.
     """
+    codec = resolve_codec(codec) if quantize else "off"
+    wire = _REDUCE_WIRE[codec]
+    idx = jax.lax.axis_index(axis)
     # reduce: every non-root sends its accumulated value to its parent
     # exactly once, deepest level first, so parents accumulate complete
     # subtree sums before forwarding
     for perm in tree.reduce_rounds:
-        c = c + _send(c, axis, perm, quantize)
-    # broadcast: the root's total overwrites down the levels
-    for perm in tree.bcast_rounds:
-        recv = _send(c, axis, perm, quantize)
-        c = jnp.where(_dst_mask(perm, n, axis), recv, c)
+        c = c + _send(c, axis, perm, wire)
+    # broadcast: the root's total overwrites down the levels.  Quantized,
+    # the total is packed ONCE and the int8 wire forwards verbatim.
+    if not tree.bcast_rounds:
+        return c
+    if codec != "off" and c.dtype in _FLOATS:
+        packed = _pack_wire32(c)
+        for perm, table in zip(tree.bcast_rounds, tree.bcast_dst):
+            recv = jax.lax.ppermute(packed, axis, list(perm))
+            packed = jnp.where(jnp.asarray(table)[idx], recv, packed)
+        return _unpack_wire32(packed, c.dtype, c.shape[0])
+    for perm, table in zip(tree.bcast_rounds, tree.bcast_dst):
+        recv = jax.lax.ppermute(c, axis, list(perm))
+        c = jnp.where(jnp.asarray(table)[idx], recv, c)
     return c
 
 
@@ -218,7 +311,7 @@ def per_tree_allreduce(x, spec: TreeAllreduceSpec, quantize: bool = False):
 
 
 # ---------------------------------------------------------------------------
-# fused global-round execution (inside shard_map) -- the default engine
+# fused global-round execution (inside shard_map) -- round-aligned baseline
 # ---------------------------------------------------------------------------
 
 def _wave_rows(rnd):
@@ -230,26 +323,24 @@ def _wave_rows(rnd):
     return (np.unique(rnd.send_row[srcs]), np.unique(rnd.recv_row[dsts]))
 
 
-def _fused_send(chunks, rnd, idx, axis, quantize: bool):
+def _fused_send(chunks, rnd, idx, axis, wire=None):
     """One wave: every vertex ships the chunk row its table says, the
     single ppermute moves all trees' round-r traffic at once, and the
     receive tables say where (and whether) the arrival lands."""
     send_rows, recv_rows = _wave_rows(rnd)
-    if len(send_rows) == 1:
+    if chunks.ndim == 1:
+        payload = chunks
+    elif len(send_rows) == 1:
         payload = chunks[int(send_rows[0])]
     else:
         payload = chunks[jnp.asarray(rnd.send_row)[idx]]
-    if quantize:
-        payload = _pack_q8(payload)
-    recv = jax.lax.ppermute(payload, axis, list(rnd.perm))
-    if quantize:
-        recv = _unpack_q8(recv, chunks.dtype)
+    recv = _send(payload, axis, rnd.perm, wire)
     flag = jnp.asarray(rnd.recv_flag)[idx]
     return recv, flag, recv_rows
 
 
 def fused_tree_allreduce(x, spec: FusedAllreduceSpec, quantize: bool = False,
-                         fractions=None):
+                         fractions=None, codec=None):
     """Allreduce (sum) of the per-device array ``x`` over ``spec.axes``
     with the fused global-round program.
 
@@ -257,14 +348,18 @@ def fused_tree_allreduce(x, spec: FusedAllreduceSpec, quantize: bool = False,
     ``spec.axes``.  ``x`` is flattened and striped into k chunk rows
     (uniform split, or ``chunk_sizes(size, fractions)`` when weighted
     striping is requested); rows are padded to a common width so the
-    stacked ``(k, m)`` state ships through shared waves.  Returns the
-    summed array in the original shape (replicated across the fabric).
+    stacked ``(k, m)`` state ships through shared waves.  Single-tree
+    specs skip the row stacking/indexing machinery entirely and run on
+    the flat chunk.  Returns the summed array in the original shape
+    (replicated across the fabric).
     """
     if spec.k == 0 or x.size == 0:
         return x
     if fractions is not None and len(fractions) != spec.k:
         raise ValueError(f"{len(fractions)} fractions for k={spec.k} trees; "
                          "spec and striping must come from the same schedule")
+    codec = resolve_codec(codec) if quantize else "off"
+    r_wire = _REDUCE_WIRE[codec]
     axis = _axis_arg(spec)
     shape, dtype = x.shape, x.dtype
     flat = x.reshape(-1)
@@ -272,7 +367,8 @@ def fused_tree_allreduce(x, spec: FusedAllreduceSpec, quantize: bool = False,
     if fractions is None:
         m = -(-flat.size // k)
         sizes = (m,) * k
-        chunks = jnp.pad(flat, (0, m * k - flat.size)).reshape(k, m)
+        padded = jnp.pad(flat, (0, m * k - flat.size))
+        chunks = padded if k == 1 else padded.reshape(k, m)
     else:
         sizes = chunk_sizes(flat.size, fractions)
         m = max(sizes)
@@ -281,49 +377,55 @@ def fused_tree_allreduce(x, spec: FusedAllreduceSpec, quantize: bool = False,
             c = flat[off:off + s]
             off += s
             rows.append(c if s == m else jnp.pad(c, (0, m - s)))
-        chunks = jnp.stack(rows)
+        chunks = rows[0] if k == 1 else jnp.stack(rows)
 
     idx = jax.lax.axis_index(axis)
     rows_iota = jnp.arange(k)
 
-    # reduce accumulation: the tree_combine kernel accumulates in f32
-    # (on-chip on TPU), which is what gradient payloads (f32/bf16/f16)
-    # want; wider or integer dtypes, where f32 would round, add natively
-    if chunks.dtype in (jnp.float32, jnp.bfloat16, jnp.float16):
-        def acc(partial, update):
-            return combine(update[None, :], partial)
-    else:
-        def acc(partial, update):
-            return partial + update
-
-    # reduce: arrivals accumulate into their tree's row.  Single-row
-    # waves combine just that row; multi-row waves scatter the arrival to
-    # a one-hot (k, m) contribution first.
+    # reduce: arrivals accumulate into their tree's row.  k=1 and
+    # single-row waves need no masking at all (ppermute zero-fills
+    # devices nobody sent to); multi-row waves scatter the arrival to a
+    # one-hot (k, m) contribution first.
     for rnd in spec.reduce_rounds:
-        recv, flag, recv_rows = _fused_send(chunks, rnd, idx, axis, quantize)
-        masked = jnp.where(flag, recv, jnp.zeros_like(recv))
-        if len(recv_rows) == 1:
+        recv, flag, recv_rows = _fused_send(chunks, rnd, idx, axis, r_wire)
+        if k == 1:
+            chunks = _acc(chunks, recv)
+        elif len(recv_rows) == 1:
             r0 = int(recv_rows[0])
-            chunks = chunks.at[r0].set(acc(chunks[r0], masked))
+            chunks = chunks.at[r0].set(_acc(chunks[r0], recv))
         else:
             row = jnp.asarray(rnd.recv_row)[idx]
+            masked = jnp.where(flag, recv, jnp.zeros_like(recv))
             contrib = (rows_iota == row).astype(chunks.dtype)[:, None] \
                 * masked[None, :]
-            chunks = acc(chunks.reshape(-1),
-                         contrib.reshape(-1)).reshape(k, m)
+            chunks = _acc(chunks.reshape(-1),
+                          contrib.reshape(-1)).reshape(k, m)
 
-    # broadcast: arrivals overwrite their tree's row on destinations
+    # broadcast: arrivals overwrite their tree's row on destinations.
+    # Quantized, the per-row totals are packed ONCE here into the
+    # f32-lane wire and forwarded verbatim down the levels (codec cost
+    # amortized over depth hops, one quantization error instead of one
+    # per hop, and 4x fewer elements under every wave's row machinery).
+    q_bcast = codec != "off" and bool(spec.bcast_rounds) and dtype in _FLOATS
+    if q_bcast:
+        chunks = _pack_wire32(chunks)
     for rnd in spec.bcast_rounds:
-        recv, flag, recv_rows = _fused_send(chunks, rnd, idx, axis, quantize)
-        if len(recv_rows) == 1:
+        recv, flag, recv_rows = _fused_send(chunks, rnd, idx, axis)
+        if k == 1:
+            chunks = jnp.where(flag, recv, chunks)
+        elif len(recv_rows) == 1:
             r0 = int(recv_rows[0])
             chunks = chunks.at[r0].set(jnp.where(flag, recv, chunks[r0]))
         else:
             row = jnp.asarray(rnd.recv_row)[idx]
             sel = ((rows_iota == row) & flag)[:, None]
             chunks = jnp.where(sel, recv[None, :], chunks)
+    if q_bcast:
+        chunks = _unpack_wire32(chunks, dtype, m)
 
-    if fractions is None:
+    if k == 1:
+        out = chunks[:flat.size] if fractions is None else chunks[:sizes[0]]
+    elif fractions is None:
         out = chunks.reshape(-1)[:flat.size]
     else:
         parts = [chunks[j, :s] for j, s in enumerate(sizes) if s > 0]
@@ -331,15 +433,262 @@ def fused_tree_allreduce(x, spec: FusedAllreduceSpec, quantize: bool = False,
     return out.reshape(shape).astype(dtype)
 
 
-def tree_allreduce(x, spec, quantize: bool = False):
+# ---------------------------------------------------------------------------
+# pipelined segmented execution (inside shard_map) -- the default engine
+# ---------------------------------------------------------------------------
+
+def auto_segments(spec: PipelinedAllreduceSpec, row_elems: int,
+                  itemsize: int = 4) -> int:
+    """The segment count the backend-calibrated cost model picks for
+    ``row_elems``-element chunk rows (see ``CostModel.for_backend``)."""
+    cm = CostModel.for_backend(jax.default_backend())
+    nbytes = row_elems * itemsize * max(1, spec.k)
+    return max(1, min(cm.best_segments(nbytes, spec), row_elems or 1))
+
+
+def _gather(table, idx):
+    return jnp.asarray(table)[idx]
+
+
+def _select_payload(rows, wv, idx):
+    """The wave's outgoing chunk: most waves ship one row statically;
+    multi-row waves select per device via the spec's send-row table."""
+    payload = rows[wv.rows[0]]
+    for r in wv.rows[1:]:
+        payload = jnp.where(_gather(wv.send_row == r, idx), rows[r], payload)
+    return payload
+
+
+def _apply_wave(rows, wv, recv, idx, valid=None):
+    """Land one wave's arrival: accumulate into reduce destinations,
+    overwrite broadcast destinations, leave everyone else untouched.
+    ``wv.sole_add`` waves skip masking (zero payload on non-destinations);
+    ``valid`` gates fill/drain steps of the pipelined scan."""
+    zero = jnp.zeros((), recv.dtype)
+    for j in range(len(rows)):
+        rf, bf = wv.reduce_flag[j], wv.bcast_flag[j]
+        if not (rf.any() or bf.any()):
+            continue
+        if wv.sole_add == j and valid is None:
+            rows[j] = _acc(rows[j], recv)
+            continue
+        base = rows[j]
+        if rf.any():
+            mask = _gather(rf, idx) if valid is None \
+                else _gather(rf, idx) & valid
+            if wv.sole_add == j:
+                base = _acc(base, jnp.where(valid, recv, zero))
+            else:
+                base = _acc(base, jnp.where(mask, recv, zero))
+        if bf.any():
+            mask = _gather(bf, idx) if valid is None \
+                else _gather(bf, idx) & valid
+            base = jnp.where(mask, recv, base)
+        rows[j] = base
+    return rows
+
+
+def _rows_of(flat, k, sizes, mrow):
+    rows, off = [], 0
+    for s in sizes:
+        c = flat[off:off + s]   # the last row may run short of its size
+        off += s
+        rows.append(c if c.shape[0] == mrow
+                    else jnp.pad(c, (0, mrow - c.shape[0])))
+    return rows
+
+
+def _rows_out(rows, sizes, size):
+    """Row widths may exceed the logical stripe sizes (segment padding),
+    so each row is cut back to its stripe before reassembly."""
+    parts = [rows[j][:s] for j, s in enumerate(sizes) if s > 0]
+    out = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+    return out[:size]
+
+
+def pipelined_tree_allreduce(x, spec: PipelinedAllreduceSpec,
+                             quantize: bool = False, segments="auto",
+                             fractions=None, codec=None):
+    """Allreduce (sum) of the per-device array ``x`` over ``spec.axes``
+    with the pipelined segmented wave program (the default engine).
+
+    Must run inside a ``shard_map`` whose manual axes include
+    ``spec.axes``.  ``x`` is flattened and striped into k chunk rows
+    (uniform, or weighted by ``fractions`` via ``chunk_sizes``), padded
+    to a common row width.  ``segments`` splits each row into S pipeline
+    segments: S=1 unrolls the wave list directly (no pipelining
+    overhead); S>1 runs a ``fori_loop`` over ``waves + S - 1`` steps in
+    which wave w moves segment ``t - w`` -- steady state keeps every
+    tree edge busy and the HLO holds each wave's collective exactly
+    once, whatever S is.  ``"auto"`` asks the backend-calibrated cost
+    model (:func:`auto_segments`).  ``quantize``/``codec`` select the
+    int8 wire (see module docstring).
+    """
+    if spec.k == 0 or x.size == 0:
+        return x
+    if fractions is not None and len(fractions) != spec.k:
+        raise ValueError(f"{len(fractions)} fractions for k={spec.k} trees; "
+                         "spec and striping must come from the same schedule")
+    codec = resolve_codec(codec) if quantize else "off"
+    if x.dtype not in _FLOATS:
+        codec = "off"       # integer payloads always travel verbatim
+    if codec == "off":
+        quantize = False    # model-disabled codec: identical f32 program
+    axis = _axis_arg(spec)
+    idx = jax.lax.axis_index(axis)
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1)
+    k = spec.k
+    if fractions is None:
+        mrow = -(-flat.size // k)
+        sizes = (mrow,) * k
+    else:
+        sizes = chunk_sizes(flat.size, fractions)
+        mrow = max(sizes)
+    if segments == "auto" or segments is None:
+        segments = auto_segments(spec, mrow, dtype.itemsize)
+    segments = max(1, min(int(segments), mrow))
+    msub = -(-mrow // segments)
+    mrow = msub * segments
+    rows = _rows_of(flat, k, sizes, mrow)
+
+    if segments == 1:
+        if quantize:
+            rows = _q8_unrolled(rows, spec, idx, axis, codec)
+        else:
+            for wv in spec.waves:
+                recv = jax.lax.ppermute(_select_payload(rows, wv, idx),
+                                        axis, list(wv.perm))
+                rows = _apply_wave(rows, wv, recv, idx)
+    else:
+        rows = _scanned(rows, spec, idx, axis, segments, msub,
+                        codec if quantize else None, dtype)
+
+    out = _rows_out(rows, sizes, flat.size)
+    return out.reshape(shape).astype(dtype)
+
+
+def _q8_unrolled(rows, spec, idx, axis, codec):
+    """S=1 quantized program: phase-separated waves; reduce hops' wire
+    per the codec policy, then every row packs ONCE at the reduce/
+    broadcast boundary and the int8 wire forwards verbatim down the
+    trees."""
+    dtype = rows[0].dtype
+    r_wire = _REDUCE_WIRE[codec]
+    for wv in spec.q8_waves[:spec.q8_boundary]:
+        payload = _select_payload(rows, wv, idx)
+        if r_wire == "q8" and payload.dtype in _FLOATS:
+            wire = jax.lax.ppermute(q8_pack(payload), axis, list(wv.perm))
+            if wv.sole_add >= 0:
+                rows[wv.sole_add] = q8_combine(wire, rows[wv.sole_add])
+                continue
+            recv = q8_unpack(wire, dtype)
+        else:
+            recv = _send(payload, axis, wv.perm, r_wire)
+        rows = _apply_wave(rows, wv, recv, idx)
+    if spec.q8_boundary == len(spec.q8_waves) or dtype not in _FLOATS:
+        for wv in spec.q8_waves[spec.q8_boundary:]:
+            recv = jax.lax.ppermute(_select_payload(rows, wv, idx),
+                                    axis, list(wv.perm))
+            rows = _apply_wave(rows, wv, recv, idx)
+        return rows
+    mrow = rows[0].shape[0]
+    if len(rows) == 1:
+        packed = [_pack_wire32(rows[0])]
+    else:
+        packed = list(_pack_wire32(jnp.stack(rows)))
+    for wv in spec.q8_waves[spec.q8_boundary:]:
+        recv = jax.lax.ppermute(_select_payload(packed, wv, idx),
+                                axis, list(wv.perm))
+        for j in range(len(packed)):
+            if wv.bcast_flag[j].any():
+                packed[j] = jnp.where(_gather(wv.bcast_flag[j], idx),
+                                      recv, packed[j])
+    if len(packed) == 1:
+        return [_unpack_wire32(packed[0], dtype, mrow)]
+    return list(_unpack_wire32(jnp.stack(packed), dtype, mrow))
+
+
+def _scanned(rows, spec, idx, axis, segments, msub, codec, dtype):
+    """S>1: software-pipeline the wave program with a ``fori_loop`` over
+    the step index.  The carry holds the ``(k, S, msub)`` segmented state
+    (plus the packed broadcast state when quantized); the body issues
+    every wave once on segment ``t - stage(w)``, so the compiled HLO
+    holds one collective per wave however many segments stream through.
+    Out-of-range segments clamp and their arrivals are masked off, which
+    makes the fill/drain steps no-ops for inactive waves."""
+    k = len(rows)
+    st = jnp.stack(rows).reshape(k, segments, msub)
+    waves = spec.waves if codec is None else spec.q8_waves
+    boundary = len(waves) if codec is None else spec.q8_boundary
+    # quantized scans insert a pack pseudo-stage at the phase boundary,
+    # shifting broadcast waves one step later
+    stage = [w if (codec is None or w < boundary) else w + 1
+             for w in range(len(waves))]
+    nsteps = (len(waves) if codec is None else len(waves) + 1) + segments - 1
+    pst = jnp.zeros((k, segments, msub + 4), jnp.int8) if codec is not None \
+        else None
+
+    def seg_slice(arr, j, seg):
+        return jax.lax.dynamic_slice(
+            arr, (j, seg, 0), (1, 1, arr.shape[-1])).reshape(-1)
+
+    def seg_update(arr, j, seg, val):
+        return jax.lax.dynamic_update_slice(
+            arr, val.reshape(1, 1, -1), (j, seg, 0))
+
+    def body(t, carry):
+        st, pst = carry
+        for w, wv in enumerate(waves):
+            seg = t - stage[w]
+            valid = (seg >= 0) & (seg < segments)
+            segc = jnp.clip(seg, 0, segments - 1)
+            bcast_wave = codec is not None and w >= boundary
+            src = pst if bcast_wave else st
+            cur = [seg_slice(src, j, segc) for j in range(k)]
+            payload = _select_payload(cur, wv, idx)
+            recv = _send(payload, axis, wv.perm,
+                         None if bcast_wave else _REDUCE_WIRE.get(codec))
+            new = _apply_wave(list(cur), wv, recv, idx, valid=valid)
+            for j in range(k):
+                if new[j] is not cur[j]:
+                    if bcast_wave:
+                        pst = seg_update(pst, j, segc, new[j])
+                    else:
+                        st = seg_update(st, j, segc, new[j])
+        if codec is not None:
+            # pack pseudo-stage: segment t - boundary crosses into bcast
+            seg = t - boundary
+            valid = (seg >= 0) & (seg < segments)
+            segc = jnp.clip(seg, 0, segments - 1)
+            for j in range(k):
+                wire = q8_pack(seg_slice(st, j, segc))
+                old = seg_slice(pst, j, segc)
+                pst = seg_update(pst, j, segc,
+                                 jnp.where(valid, wire, old))
+        return st, pst
+
+    st, pst = jax.lax.fori_loop(0, nsteps, body, (st, pst))
+    if codec is not None:
+        scales = jax.lax.bitcast_convert_type(
+            pst[:, :, msub:], jnp.float32).reshape(k, segments, 1)
+        st = (pst[:, :, :msub].astype(jnp.float32) * scales).astype(st.dtype)
+    return [st[j].reshape(-1) for j in range(k)]
+
+
+def tree_allreduce(x, spec, quantize: bool = False, segments="auto"):
     """Allreduce (sum) of the per-device array ``x`` over ``spec.axes``.
 
     Dispatches on the spec form: a
-    :class:`repro.core.collectives.FusedAllreduceSpec` runs the fused
-    global-round engine, a :class:`TreeAllreduceSpec` the per-tree
-    baseline chains.  Both return the summed array in the original shape
+    :class:`repro.core.collectives.PipelinedAllreduceSpec` runs the
+    pipelined segmented engine (the default the rest of the stack
+    compiles), a :class:`repro.core.collectives.FusedAllreduceSpec` the
+    fused global-round baseline, a :class:`TreeAllreduceSpec` the
+    per-tree chains.  All return the summed array in the original shape
     (replicated across the fabric).
     """
+    if isinstance(spec, PipelinedAllreduceSpec):
+        return pipelined_tree_allreduce(x, spec, quantize, segments)
     if isinstance(spec, FusedAllreduceSpec):
         return fused_tree_allreduce(x, spec, quantize)
     return per_tree_allreduce(x, spec, quantize)

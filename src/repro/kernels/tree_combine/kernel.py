@@ -1,10 +1,21 @@
-"""Pallas TPU kernel: multi-child partial-sum combine for the EDST tree
-reduce (the per-round "in-switch" reduction, executed on-chip on TPU).
+"""Pallas TPU kernels for the EDST tree collectives: the multi-child
+partial-sum combine and the int8 wire codec.
 
-out = partial + sum_over_children(recv) over a length-L flat buffer, tiled so
-each grid step streams one (children, tile) block through VMEM.  f32
-accumulation regardless of payload dtype (gradient chunks are bf16 on the
-wire when quantization is off).
+``tree_combine``: out = partial + sum_over_children(recv) over a length-L
+flat buffer, tiled so each grid step streams one (children, tile) block
+through VMEM.  f32 accumulation regardless of payload dtype (gradient
+chunks are bf16 on the wire when quantization is off).
+
+``q8_pack_wire`` / ``q8_combine_wire`` / ``q8_unpack_wire``: the quantized
+wire format is ``(L + 4,) int8`` -- L quantized lanes followed by the
+per-chunk f32 scale bit-packed into a 4-byte tail, so a quantized hop is
+ONE ppermute payload.  Pack (quantize + tail write), unpack+accumulate
+(dequantize fused into the partial-sum add) and plain unpack each run as
+a single kernel, replacing the separate quantize / bitcast / concatenate
+/ dequantize XLA op chains that made the q8 path a regression.  The wire
+kernels process the whole buffer as one VMEM block; callers fall back to
+the reference for buffers beyond VMEM reach (``ops.combine`` handles the
+dispatch).
 """
 from __future__ import annotations
 
@@ -43,3 +54,72 @@ def tree_combine(recv, partial, *, tile=65536, interpret=False):
         interpret=interpret,
     )(recv, partial)
     return out[:l]
+
+
+# ---------------------------------------------------------------------------
+# int8 wire codec
+# ---------------------------------------------------------------------------
+
+def _scale_tail(scale):
+    return jax.lax.bitcast_convert_type(scale.astype(jnp.float32), jnp.int8)
+
+
+def _tail_scale(tail):
+    return jax.lax.bitcast_convert_type(tail, jnp.float32)
+
+
+def _q8_pack_kernel(x_ref, s_ref, o_ref):
+    l = x_ref.shape[0]
+    scale = s_ref[0]
+    # |x| <= 127 * scale by construction of the scale, so no clip needed
+    o_ref[:l] = jnp.round(x_ref[...].astype(jnp.float32)
+                          * (1.0 / scale)).astype(jnp.int8)
+    o_ref[l:] = _scale_tail(scale)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def q8_pack_wire(x, scale, *, interpret=False):
+    """x: (L,) float, scale: () f32 with max|x| <= 127*scale -> (L+4,) int8
+    wire buffer (quantized lanes + bit-packed scale tail), one kernel."""
+    (l,) = x.shape
+    return pl.pallas_call(
+        _q8_pack_kernel,
+        out_shape=jax.ShapeDtypeStruct((l + 4,), jnp.int8),
+        interpret=interpret,
+    )(x, scale.reshape(1))
+
+
+def _q8_combine_kernel(w_ref, part_ref, o_ref):
+    l = part_ref.shape[0]
+    scale = _tail_scale(w_ref[l:])
+    o_ref[...] = (part_ref[...].astype(jnp.float32)
+                  + w_ref[:l].astype(jnp.float32) * scale).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def q8_combine_wire(wire, partial, *, interpret=False):
+    """partial + dequantize(wire): the quantize-aware combine -- scale
+    extraction, dequantize and accumulate fused into one kernel."""
+    (l,) = partial.shape
+    return pl.pallas_call(
+        _q8_combine_kernel,
+        out_shape=jax.ShapeDtypeStruct((l,), partial.dtype),
+        interpret=interpret,
+    )(wire, partial)
+
+
+def _q8_unpack_kernel(w_ref, o_ref):
+    l = o_ref.shape[0]
+    scale = _tail_scale(w_ref[l:])
+    o_ref[...] = (w_ref[:l].astype(jnp.float32) * scale).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "interpret"))
+def q8_unpack_wire(wire, dtype=jnp.float32, *, interpret=False):
+    """Plain dequantize of a wire buffer (the broadcast-phase epilogue)."""
+    (lw,) = wire.shape
+    return pl.pallas_call(
+        _q8_unpack_kernel,
+        out_shape=jax.ShapeDtypeStruct((lw - 4,), dtype),
+        interpret=interpret,
+    )(wire)

@@ -1,16 +1,85 @@
-"""jit'd entry point for tree_combine."""
+"""jit'd entry points for the tree-combine and int8 wire-codec kernels.
+
+Dispatch policy: the Pallas kernels run on TPU (and under interpret mode
+when explicitly requested); host backends take the jnp references, which
+XLA fuses into the surrounding program -- interpret-mode Pallas would be
+strictly slower there.  The wire kernels additionally fall back to the
+reference for buffers too large for a single VMEM block.
+"""
 from __future__ import annotations
 
 import jax
 
-from .kernel import tree_combine
-from .ref import tree_combine_ref
+from .kernel import (q8_combine_wire, q8_pack_wire, q8_unpack_wire,
+                     tree_combine)
+from .ref import (q8_combine_ref, q8_pack_ref, q8_pack_rows_ref, q8_scale,
+                  q8_unpack_ref, q8_unpack_rows_ref, tree_combine_ref)
+
+# one VMEM block must hold the wire + the f32 view with headroom
+_WIRE_VMEM_ELEMS = 1 << 20
+
+
+def _on_tpu(use_pallas):
+    if use_pallas is None:
+        return jax.default_backend() == "tpu"
+    return use_pallas
 
 
 def combine(recv, partial, *, use_pallas=None):
-    if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
-    if use_pallas:
+    if _on_tpu(use_pallas):
         return tree_combine(recv, partial,
                             interpret=jax.default_backend() != "tpu")
     return tree_combine_ref(recv, partial)
+
+
+def q8_pack(x, scale=None, *, use_pallas=None):
+    """Quantize ``x`` into the ``(L+4,) int8`` wire form (payload + scale
+    tail).  ``scale`` defaults to :func:`q8_scale` of ``x``."""
+    if scale is None:
+        scale = q8_scale(x)
+    if _on_tpu(use_pallas) and x.size <= _WIRE_VMEM_ELEMS:
+        return q8_pack_wire(x, scale,
+                            interpret=jax.default_backend() != "tpu")
+    return q8_pack_ref(x, scale)
+
+
+def q8_combine(wire, partial, *, use_pallas=None):
+    """partial + dequantize(wire): the quantize-aware tree combine."""
+    if _on_tpu(use_pallas) and wire.size <= _WIRE_VMEM_ELEMS:
+        return q8_combine_wire(wire, partial,
+                               interpret=jax.default_backend() != "tpu")
+    return q8_combine_ref(wire, partial)
+
+
+def q8_unpack(wire, dtype=None, *, use_pallas=None):
+    """Dequantize a wire buffer back to ``dtype`` (default f32)."""
+    import jax.numpy as jnp
+    dtype = jnp.float32 if dtype is None else dtype
+    if _on_tpu(use_pallas) and wire.size <= _WIRE_VMEM_ELEMS:
+        return q8_unpack_wire(wire, dtype,
+                              interpret=jax.default_backend() != "tpu")
+    return q8_unpack_ref(wire, dtype)
+
+
+def q8_pack_rows(x, *, use_pallas=None):
+    """Pack every chunk row at once: (k, m) -> (k, m+4) int8 wires (the
+    broadcast-phase pack-once point).  On TPU the pack kernel vmaps over
+    rows; host backends take the row-batched reference."""
+    if _on_tpu(use_pallas) and x.size <= _WIRE_VMEM_ELEMS:
+        scales = q8_scale(x, axis=1)
+        interpret = jax.default_backend() != "tpu"
+        return jax.vmap(lambda r, s: q8_pack_wire(r, s, interpret=interpret)
+                        )(x, scales)
+    return q8_pack_rows_ref(x)
+
+
+def q8_unpack_rows(wires, dtype=None, *, use_pallas=None):
+    """Inverse of :func:`q8_pack_rows`: (k, m+4) int8 -> (k, m)."""
+    import jax.numpy as jnp
+    dtype = jnp.float32 if dtype is None else dtype
+    if _on_tpu(use_pallas) and wires.size <= _WIRE_VMEM_ELEMS:
+        interpret = jax.default_backend() != "tpu"
+        return jax.vmap(lambda w: q8_unpack_wire(w, dtype,
+                                                 interpret=interpret)
+                        )(wires)
+    return q8_unpack_rows_ref(wires, dtype)

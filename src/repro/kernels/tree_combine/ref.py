@@ -1,7 +1,53 @@
-"""Oracle for the tree-combine kernel."""
+"""Oracles for the tree-combine and int8 wire-codec kernels (also the
+host-backend fast paths: plain jnp ops that XLA fuses)."""
+import jax
 import jax.numpy as jnp
 
 
 def tree_combine_ref(recv, partial):
     return (partial.astype(jnp.float32)
             + recv.astype(jnp.float32).sum(0)).astype(partial.dtype)
+
+
+def q8_scale(x, axis=None, keepdims=False):
+    """The per-chunk f32 scale: max|x| maps to the top of the int8 range.
+    The epsilon keeps |x|/scale strictly below 127.5 so the rounded
+    quantizer never leaves [-127, 127] (no clip on the hot path).
+    ``axis`` computes one scale per row for row-batched packs."""
+    return (jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims)
+            * (1.0 / 127.0) + 1e-30).astype(jnp.float32)
+
+
+def q8_pack_ref(x, scale):
+    q = jnp.round(x.astype(jnp.float32) * (1.0 / scale)).astype(jnp.int8)
+    tail = jax.lax.bitcast_convert_type(scale, jnp.int8)
+    return jnp.concatenate([q, tail])
+
+
+def q8_combine_ref(wire, partial):
+    scale = jax.lax.bitcast_convert_type(wire[-4:], jnp.float32)
+    return (partial.astype(jnp.float32)
+            + wire[:-4].astype(jnp.float32) * scale).astype(partial.dtype)
+
+
+def q8_unpack_ref(wire, dtype=jnp.float32):
+    scale = jax.lax.bitcast_convert_type(wire[-4:], jnp.float32)
+    return (wire[:-4].astype(jnp.float32) * scale).astype(dtype)
+
+
+def q8_pack_rows_ref(x):
+    """Row-batched pack: (k, m) float -> (k, m+4) int8 wires, one fused
+    op chain for all chunk rows (k codec invocations would cost k op
+    dispatches each on host backends)."""
+    scale = q8_scale(x, axis=1, keepdims=True)
+    q = jnp.round(x.astype(jnp.float32) * (1.0 / scale)).astype(jnp.int8)
+    tails = jax.lax.bitcast_convert_type(scale, jnp.int8).reshape(
+        x.shape[0], 4)
+    return jnp.concatenate([q, tails], axis=1)
+
+
+def q8_unpack_rows_ref(wires, dtype=jnp.float32):
+    """Inverse of :func:`q8_pack_rows_ref`: (k, m+4) int8 -> (k, m)."""
+    scale = jax.lax.bitcast_convert_type(wires[:, -4:], jnp.float32)
+    return (wires[:, :-4].astype(jnp.float32)
+            * scale.reshape(-1, 1)).astype(dtype)

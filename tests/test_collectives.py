@@ -106,3 +106,125 @@ def test_random_link_failures_property(n_fail, seed):
     from repro.core.edst_rt import max_edsts
     trees, _ = max_edsts(fta.graph)
     assert rebuilt.k == max(len(trees), fta.k)
+
+
+# ---------------------------------------------------------------------------
+# pipelined wave program (list-scheduled, segment-streaming compiled form)
+# ---------------------------------------------------------------------------
+
+from repro.core import (pipelined_spec_from_schedule,  # noqa: E402
+                        simulate_wave_program)
+from repro.core.collectives import BCAST, REDUCE, empty_pipelined_spec
+
+
+def _spec_for(dims):
+    sp = topo.device_topology(dims)
+    sched = allreduce_schedule(sp.n, star_edsts(sp).trees)
+    return sched, pipelined_spec_from_schedule(sched, ("data",))
+
+
+@pytest.mark.parametrize("dims", [(4, 4), (2, 8), (3, 3), (2, 4, 4)])
+def test_wave_program_legality_and_conservation(dims):
+    sched, spec = _spec_for(dims)
+    for waves in (spec.waves, spec.q8_waves):
+        seen = []
+        for wv in waves:
+            srcs = [s for s, _ in wv.perm]
+            dsts = [d for _, d in wv.perm]
+            assert len(set(srcs)) == len(srcs), "wave reuses a source"
+            assert len(set(dsts)) == len(dsts), "wave reuses a destination"
+            seen.extend(wv.perm)
+        # conservation: every tree edge carries exactly one reduce and one
+        # broadcast message over the whole program
+        assert len(seen) == 2 * sum(len(ts.tree) for ts in sched.trees)
+
+
+@pytest.mark.parametrize("dims", [(4, 4), (2, 8), (3, 3)])
+def test_wave_program_beats_fused_wave_count(dims):
+    sched, spec = _spec_for(dims)
+    from repro.core import fused_spec_from_schedule
+    fused = fused_spec_from_schedule(sched, ("data",))
+    # the DAG list schedule packs across trees, rounds AND phases: never
+    # more waves than the round-aligned fused program, and its floor is
+    # the dependency critical path (2 * depth)
+    assert len(spec.waves) <= fused.num_collectives
+    assert len(spec.waves) >= 2 * spec.depth
+
+
+@pytest.mark.parametrize("dims", [(4, 4), (2, 8), (2, 4, 4)])
+@pytest.mark.parametrize("segments", [1, 2, 4, 8, 16])
+def test_wave_program_simulates_correct_for_any_segments(dims, segments):
+    sched, spec = _spec_for(dims)
+    vals = np.random.RandomState(segments).randn(sched.n, 6 * sched.k + 1)
+    for q in (False, True):
+        sim = simulate_wave_program(spec, vals, segments, quantized=q)
+        assert sim.ok, (dims, segments, q)
+        waves = spec.q8_waves if q else spec.waves
+        assert sim.rounds == spec.steps(segments) if not q \
+            else sim.rounds == len(waves) + segments - 1
+        # EDST property survives pipelining: one message per directed link
+        # per step (full-duplex: a phase-mixed wave may use both directions)
+        assert sim.max_link_load == 1
+
+
+def test_q8_program_is_phase_separated():
+    _, spec = _spec_for((4, 4))
+    for i, wv in enumerate(spec.q8_waves):
+        kinds = set()
+        if wv.reduce_flag.any():
+            kinds.add(REDUCE)
+        if wv.bcast_flag.any():
+            kinds.add(BCAST)
+        assert len(kinds) == 1
+        assert (kinds == {REDUCE}) == (i < spec.q8_boundary)
+
+
+def test_pipelined_spec_cache_and_tables():
+    sched, spec = _spec_for((4, 4))
+    assert pipelined_spec_from_schedule(sched, ("data",)) is spec
+    send, dst, recv, kind = spec.tables
+    r, n = len(spec.waves), spec.n
+    assert send.shape == dst.shape == recv.shape == kind.shape == (r, n)
+    for w, wv in enumerate(spec.waves):
+        for s, d in wv.perm:
+            assert dst[w, s] == d
+            j = send[w, s]
+            assert recv[w, d] == j
+            assert kind[w, d] == (REDUCE if wv.reduce_flag[j, d] else BCAST)
+    empty = empty_pipelined_spec(16, ("data",))
+    assert empty.k == 0 and empty.steps(4) == 3
+
+
+def test_cost_model_backend_calibration_picks_segments():
+    _, spec = _spec_for((4, 4))
+    host = CostModel.for_backend("cpu")
+    fabric = CostModel.for_backend("tpu")
+    # serialized collectives: pipelining never pays, S=1
+    assert host.best_segments(64 << 10, spec) == 1
+    # overlapping fabric links: large payloads stream many segments
+    assert fabric.best_segments(64 << 20, spec) > 8
+    # fill/drain model: more segments always cost more steps
+    assert spec.steps(8) == len(spec.waves) + 7
+    t1 = fabric.pipelined_allreduce(64 << 20, spec, 1)
+    t8 = fabric.pipelined_allreduce(64 << 20, spec, 8)
+    assert t8 < t1   # bandwidth-dominated: streaming wins
+
+
+def test_bench_diff_gates_regressions():
+    import importlib
+    bd = importlib.import_module("benchmarks.bench_diff")
+    base = {"exec/t/fused": {"us_per_call": 200.0},
+            "exec/t/pipelined": {"us_per_call": 100.0},
+            "exec/t/psum": {"us_per_call": 10.0},
+            "compile/t/x": {"us_per_call": 5.0}}
+    ok = {"exec/t/fused": {"us_per_call": 420.0},     # 2.1x, psum 2x -> 1.05
+          "exec/t/pipelined": {"us_per_call": 240.0},
+          "exec/t/psum": {"us_per_call": 20.0}}
+    rows, regs = bd.diff(base, ok, threshold=1.25)
+    assert [r[0] for r in rows] == ["exec/t/fused", "exec/t/pipelined"]
+    assert not regs
+    bad = {"exec/t/fused": {"us_per_call": 300.0},    # 1.5x vs psum 1x
+           "exec/t/pipelined": {"us_per_call": 100.0},
+           "exec/t/psum": {"us_per_call": 10.0}}
+    _, regs = bd.diff(base, bad, threshold=1.25)
+    assert regs == ["exec/t/fused"]

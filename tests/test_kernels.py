@@ -122,6 +122,62 @@ def test_tree_combine_kernel(nch, l, tile, dtype):
                                  - ref.astype(jnp.float32)))) < tol
 
 
+# -- int8 wire codec ----------------------------------------------------------
+
+@pytest.mark.parametrize("l", [64, 1000, 4096])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_q8_wire_kernels_match_refs(l, dtype):
+    from repro.kernels.tree_combine.kernel import (q8_combine_wire,
+                                                   q8_pack_wire,
+                                                   q8_unpack_wire)
+    from repro.kernels.tree_combine.ref import (q8_combine_ref, q8_pack_ref,
+                                                q8_scale, q8_unpack_ref)
+    x = rand((l,), dtype, 1) * 3.3
+    s = q8_scale(x)
+    wire_k = q8_pack_wire(x, s, interpret=True)
+    wire_r = q8_pack_ref(x, s)
+    assert wire_k.dtype == jnp.int8 and wire_k.shape == (l + 4,)
+    assert (jnp.asarray(wire_k) == jnp.asarray(wire_r)).all()
+
+    part = rand((l,), jnp.float32, 2)
+    out_k = q8_combine_wire(wire_k, part, interpret=True)
+    assert float(jnp.max(jnp.abs(out_k - q8_combine_ref(wire_r, part)))) < 1e-6
+
+    dec_k = q8_unpack_wire(wire_k, jnp.float32, interpret=True)
+    dec_r = q8_unpack_ref(wire_r, jnp.float32)
+    assert float(jnp.max(jnp.abs(dec_k - dec_r))) < 1e-6
+    # quantization round-trip error bounded by half a step
+    assert float(jnp.max(jnp.abs(dec_r - x.astype(jnp.float32)))) \
+        <= float(s) * 0.51
+
+
+def test_q8_row_batched_codec_roundtrip():
+    from repro.kernels.tree_combine.ref import (q8_pack_ref, q8_pack_rows_ref,
+                                                q8_scale, q8_unpack_rows_ref)
+    x = rand((3, 257), jnp.float32, 5) * 2.1
+    wires = q8_pack_rows_ref(x)
+    assert wires.shape == (3, 261) and wires.dtype == jnp.int8
+    # row-batched pack equals the per-row pack
+    for j in range(3):
+        assert (jnp.asarray(wires[j])
+                == jnp.asarray(q8_pack_ref(x[j], q8_scale(x[j])))).all()
+    dec = q8_unpack_rows_ref(wires, jnp.float32)
+    scales = jnp.max(jnp.abs(x), axis=1) / 127.0
+    assert float(jnp.max(jnp.abs(dec - x) / scales[:, None])) <= 0.51
+
+
+def test_q8_ops_dispatch_and_zero_wire():
+    from repro.kernels.tree_combine import ops
+    x = rand((100,), jnp.float32, 3)
+    w = ops.q8_pack(x)
+    assert float(jnp.max(jnp.abs(ops.q8_unpack(w) - x))) < 0.05
+    # an all-zero wire (what ppermute hands non-destinations) decodes to
+    # exact zeros: the zero-bit scale annihilates the payload
+    z = jnp.zeros_like(w)
+    assert (jnp.asarray(ops.q8_unpack(z)) == 0).all()
+    assert jnp.allclose(ops.q8_combine(z, x), x)
+
+
 # -- blockwise jnp sdpa (the model's CPU path) ---------------------------------
 
 @pytest.mark.parametrize("mode", ["causal", "full"])
