@@ -1,28 +1,39 @@
 """Allreduce executor + schedule-compiler benchmark (the repo's perf
 trajectory for the hot collective).
 
-Two families of entries:
+Three families of entries:
 
   * ``exec/<fabric>/<engine>`` -- wall-clock of one allreduce on 16 fake
     host devices: the pipelined segmented engine (the default; plus its
     S in {1,2,4,8} segment sweep and the ``segments="auto"`` pick, which
-    the row records), the fused global-round and per-tree baselines, and
-    ``jax.lax.psum``, each with and without the int8 wire, on the (4,4)
-    and (2,8) torus DP fabrics.  Cases are timed *interleaved* (every
-    engine once per block, best block wins) so slow drift on shared CI
-    hosts cannot skew one engine's row;
+    the row records), the striped reduce-scatter/allgather engine
+    (stripe-sized wires, ~2x the wave count: slower on this
+    alpha-dominated host -- that IS the datapoint the engine-selection
+    matrix documents), the fused global-round and per-tree baselines,
+    and ``jax.lax.psum``, each with and without the int8 wire, on the
+    (4,4) and (2,8) torus DP fabrics.  Cases are timed *interleaved*
+    (every engine once per block, best block wins) so slow drift on
+    shared CI hosts cannot skew one engine's row;
   * ``compile/<fabric>/<center>`` -- schedule-compile time of the
     depth-minimizing root search: the CSR double-BFS center
     (``repro.core.csr``) against the historical O(n^2) every-vertex
     probe, on the paper's diameter-2/3 fabrics (Slim Fly, PolarStar) and
-    a 1024-node torus.
+    a 1024-node torus;
+  * ``calibration/<backend>`` -- measured CostModel constants (per-
+    collective alpha from the pipelined wave timings, achievable
+    collective bandwidth from the psum row).  The bench *loads* any
+    calibration already persisted in ``BENCH_allreduce.json`` before
+    autotuning (``CostModel.register_calibration``), so backends without
+    built-in constants stop falling back silently -- see
+    ``CostModel.for_backend``'s logged fallback.
 
 Every entry lands in ``BENCH_allreduce.json`` with the schema
 ``name -> {us_per_call, bytes, k, depth, [segments], [codec]}`` so
 successive PRs can append to the perf trajectory.
 ``BENCH_allreduce_quick.json`` is the committed ``--quick`` twin:
 ``benchmarks/bench_diff.py`` gates CI against it (psum-normalized,
-same-payload rows only).
+same-payload rows only; striped rows are gated like every other
+headline engine row).
 
     PYTHONPATH=src python -m benchmarks.allreduce_bench
     PYTHONPATH=src python -m benchmarks.allreduce_bench --quick --out BENCH_allreduce_quick.json
@@ -49,18 +60,23 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 
 import repro.dist  # noqa: E402  (installs compat shard_map)
 from repro.core import topologies as topo  # noqa: E402
-from repro.core.collectives import (allreduce_schedule,  # noqa: E402
-                                    _best_root_probe,
+from repro.core.collectives import (CostModel,  # noqa: E402
+                                    allreduce_schedule, _best_root_probe,
                                     fused_spec_from_schedule,
                                     pipelined_spec_from_schedule,
+                                    striped_spec_from_schedule,
                                     tree_schedule)
 from repro.core.csr import tree_center  # noqa: E402
 from repro.core.edst_star import star_edsts  # noqa: E402
+from repro.dist.striped import striped_allreduce  # noqa: E402
 from repro.dist.tree_allreduce import (auto_segments,  # noqa: E402
                                        fused_tree_allreduce,
                                        per_tree_allreduce,
                                        pipelined_tree_allreduce,
                                        resolve_codec, spec_from_schedule)
+
+TRAJECTORY = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          os.pardir, "BENCH_allreduce.json")
 
 EXEC_FABRICS = (("torus4x4", (4, 4)), ("torus2x8", (2, 8)))
 SEGMENT_SWEEP = (1, 2, 4, 8)
@@ -97,11 +113,30 @@ def _time_interleaved(fns: dict, rounds: int) -> dict:
     return best
 
 
+def load_calibration(path: str = TRAJECTORY) -> None:
+    """Re-register the CostModel constants a previous bench run persisted
+    (``calibration/<backend>`` rows), so ``segments="auto"`` autotunes
+    from measurements instead of the built-in table."""
+    try:
+        with open(path) as f:
+            rows = json.load(f)
+    except (OSError, ValueError):
+        return
+    for name, row in rows.items():
+        if not name.startswith("calibration/"):
+            continue
+        consts = {k: row[k] for k in ("link_bw", "alpha", "overlap")
+                  if k in row}
+        if consts:
+            CostModel.register_calibration(name.split("/", 1)[1], **consts)
+
+
 def bench_executors(results: dict, elems: int, iters: int) -> None:
     mesh = jax.make_mesh((16,), ("data",))
     x = (jnp.arange(16 * elems, dtype=jnp.float32).reshape(16, elems)
          * 1e-4)
     nbytes = elems * 4
+    cal_alpha, cal_bw = [], []
 
     for label, dims in EXEC_FABRICS:
         sp = topo.device_topology(dims)
@@ -109,6 +144,7 @@ def bench_executors(results: dict, elems: int, iters: int) -> None:
         pspec = pipelined_spec_from_schedule(sched, ("data",))
         fspec = fused_spec_from_schedule(sched, ("data",))
         lspec = spec_from_schedule(sched, ("data",))
+        sspec = striped_spec_from_schedule(sched, ("data",))
         mrow = -(-elems // max(1, sched.k))
         auto_s = auto_segments(pspec, mrow)
         codec = resolve_codec()
@@ -121,6 +157,7 @@ def bench_executors(results: dict, elems: int, iters: int) -> None:
 
         cases = {
             "pipelined": lambda v: pipelined_tree_allreduce(v, pspec),
+            "striped": lambda v: striped_allreduce(v, sspec),
             "fused": lambda v: fused_tree_allreduce(v, fspec),
             "per_tree": lambda v: per_tree_allreduce(v, lspec),
             "psum": lambda v: jax.lax.psum(v, "data"),
@@ -129,6 +166,8 @@ def bench_executors(results: dict, elems: int, iters: int) -> None:
             cases.update({
                 "pipelined_q8": lambda v: pipelined_tree_allreduce(
                     v, pspec, quantize=True),
+                "striped_q8": lambda v: striped_allreduce(v, sspec,
+                                                          quantize=True),
                 "fused_q8": lambda v: fused_tree_allreduce(v, fspec,
                                                            quantize=True),
                 "per_tree_q8": lambda v: per_tree_allreduce(v, lspec,
@@ -149,11 +188,14 @@ def bench_executors(results: dict, elems: int, iters: int) -> None:
             # the model-disabled codec compiles the IDENTICAL program as
             # f32 (resolve_codec docstring), so the q8 rows share their
             # counterpart's measurement rather than re-timing the same
-            # executable into measurement noise
-            for eng in ("pipelined", "fused", "per_tree"):
+            # executable into measurement noise (the striped engine's
+            # allgather wire is disabled by codec="off" too)
+            for eng in ("pipelined", "striped", "fused", "per_tree"):
                 timed[f"{eng}_q8"] = timed[eng]
         timed.update(_time_interleaved(
             {n: jitted(b) for n, b in sweep.items()}, max(2, iters // 6)))
+        cal_alpha.append(timed["pipelined"] / max(1, len(pspec.waves)))
+        cal_bw.append(nbytes / max(timed["psum"], 1e-9))
         for engine, sec in timed.items():
             row = {
                 "us_per_call": round(sec * 1e6, 1),
@@ -164,9 +206,27 @@ def bench_executors(results: dict, elems: int, iters: int) -> None:
             if engine.startswith("pipelined"):
                 row["segments"] = (int(engine.rsplit("_s", 1)[1])
                                    if "_s" in engine else auto_s)
+            if engine.startswith("striped"):
+                row["stripes"] = sp.n
             if engine.endswith("_q8"):
                 row["codec"] = codec
             results[f"exec/{label}/{engine}"] = row
+
+    backend = jax.default_backend()
+    row = {
+        "us_per_call": round(min(cal_alpha) * 1e6, 1),
+        "bytes": nbytes,
+        "k": 0,
+        "depth": 0,
+        "alpha": min(cal_alpha),
+        "link_bw": max(cal_bw),
+    }
+    # only the XLA host runtime's collective serialization is a KNOWN
+    # property worth persisting; for other backends overlap is left to
+    # CostModel's defaults rather than recorded as if it were measured
+    if backend == "cpu":
+        row["overlap"] = False
+    results[f"calibration/{backend}"] = row
 
 
 def bench_compile(results: dict, iters: int) -> None:
@@ -196,6 +256,7 @@ def bench_compile(results: dict, iters: int) -> None:
 
 
 def run_bench(quick: bool = False) -> dict:
+    load_calibration()   # autotune from persisted measurements if present
     elems = 4096 if quick else 16384
     iters = 12 if quick else 42
     results: dict = {}
@@ -218,19 +279,23 @@ def main() -> None:
 
     width = max(len(k) for k in results)
     for name, row in results.items():
-        extra = "".join(f" {key}={row[key]}" for key in ("segments", "codec")
+        extra = "".join(f" {key}={row[key]}"
+                        for key in ("segments", "stripes", "codec")
                         if key in row)
         print(f"{name:<{width}}  {row['us_per_call']:>10.1f} us  "
               f"k={row['k']} depth={row['depth']} bytes={row['bytes']}"
               f"{extra}")
     for label, _ in EXEC_FABRICS:
         rows = {e: results[f"exec/{label}/{e}"]["us_per_call"]
-                for e in ("pipelined", "pipelined_q8", "fused", "fused_q8",
+                for e in ("pipelined", "pipelined_q8", "striped",
+                          "striped_q8", "fused", "fused_q8",
                           "per_tree", "per_tree_q8", "psum")}
         print(f"{label}: fused/pipelined = "
               f"{rows['fused'] / rows['pipelined']:.2f}x   "
+              f"striped/pipelined = "
+              f"{rows['striped'] / rows['pipelined']:.2f}x   "
               f"psum/pipelined = {rows['psum'] / rows['pipelined']:.2f}x")
-        for eng in ("pipelined", "fused", "per_tree"):
+        for eng in ("pipelined", "striped", "fused", "per_tree"):
             flag = "OK" if rows[f"{eng}_q8"] <= rows[eng] else "REGRESSION"
             print(f"  {eng}_q8 vs {eng}: "
                   f"{rows[f'{eng}_q8'] / rows[eng]:.2f}x [{flag}]")

@@ -15,8 +15,12 @@ committed ``BENCH_allreduce_quick.json``, not the full-run trajectory
 file.  The ``pipelined_s{2,4,8}`` sweep rows are informational (the S>1
 scan serializes its per-step waves on host backends by design, ~10x the
 headline rows and noisy at smoke iteration counts) and are excluded from
-the gate.  A gated row regresses when its normalized cost grows by more
-than ``--threshold`` (default 1.25x).
+the gate.  Every other ``exec/*`` engine row IS gated -- including the
+``striped`` / ``striped_q8`` reduce-scatter/allgather rows (slower than
+pipelined on alpha-dominated hosts by design, but their *ratio to psum*
+must not drift) -- and ``calibration/*`` / ``compile/*`` rows are not
+exec rows, so they never gate.  A gated row regresses when its
+normalized cost grows by more than ``--threshold`` (default 1.25x).
 
     python -m benchmarks.bench_diff --baseline BENCH_allreduce_quick.json \
         --new /tmp/new.json --threshold 1.25

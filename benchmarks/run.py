@@ -5,8 +5,13 @@ roofline summary (from dry-run artifacts when present).
     PYTHONPATH=src python -m benchmarks.run --json BENCH_tables.json
 
 Prints ``name,us_per_call,derived`` CSV rows; ``--json`` additionally
-writes the same rows as ``name -> {us_per_call, derived}`` so they can
-join the ``BENCH_*.json`` perf trajectory.
+writes the same rows as ``key -> {us_per_call, derived, ...params}`` so
+they can join the ``BENCH_*.json`` perf trajectory.  Sweep rows (the
+allreduce model swept per engine / segment count / stripe count) carry a
+params dict; the JSON key embeds it -- ``allreduce/pod_16x16[engine=
+striped,stripes=256]`` -- so rows that share a base name no longer
+overwrite each other across engines, and a residual collision is
+suffixed ``#2``/``#3`` instead of silently dropped.
 """
 from __future__ import annotations
 
@@ -21,6 +26,28 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
 from benchmarks.table_benchmarks import ALL  # noqa: E402
 
 
+def row_key(name: str, params: dict | None) -> str:
+    """The JSON key of one bench row: the row name plus its identifying
+    sweep parameters (engine, segments, stripes, ...), sorted for
+    stability."""
+    if not params:
+        return name
+    inner = ",".join(f"{k}={params[k]}" for k in sorted(params))
+    return f"{name}[{inner}]"
+
+
+def add_row(rows: dict, name: str, sec: float, derived: str,
+            params: dict | None) -> None:
+    key = row_key(name, params)
+    if key in rows:         # never overwrite: disambiguate leftovers
+        i = 2
+        while f"{key}#{i}" in rows:
+            i += 1
+        key = f"{key}#{i}"
+    rows[key] = {"us_per_call": round(sec * 1e6, 1), "derived": derived,
+                 **(params or {})}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--json", metavar="PATH", default=None,
@@ -32,10 +59,11 @@ def main() -> None:
     failures = 0
     for fn in ALL:
         try:
-            for name, sec, derived in fn():
-                print(f"{name},{sec * 1e6:.1f},{derived}")
-                rows[name] = {"us_per_call": round(sec * 1e6, 1),
-                              "derived": derived}
+            for row in fn():
+                name, sec, derived = row[:3]
+                params = row[3] if len(row) > 3 else None
+                print(f"{row_key(name, params)},{sec * 1e6:.1f},{derived}")
+                add_row(rows, name, sec, derived, params)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{fn.__name__},ERROR,{e!r}")

@@ -13,7 +13,9 @@ import time
 
 from repro.core import factor_graphs as fg
 from repro.core import topologies as topo
-from repro.core.collectives import CostModel, allreduce_schedule
+from repro.core.collectives import (CostModel, allreduce_schedule,
+                                    pipelined_spec_from_schedule,
+                                    striped_spec_from_schedule)
 from repro.core.edst_star import (maximal_edsts, one_sided_edsts,
                                   property_461_edsts, star_edsts,
                                   universal_edsts)
@@ -150,7 +152,12 @@ def table4_factor_graphs():
 
 
 def allreduce_bandwidth():
-    """Sec 1.1 motivation: k-tree EDST allreduce vs ring vs single tree."""
+    """Sec 1.1 motivation: k-tree EDST allreduce vs ring vs single tree,
+    plus the modelled per-engine sweep (pipelined segment counts, the
+    striped reduce-scatter/allgather program).  Sweep rows share the
+    fabric's base name and carry a params dict -- ``benchmarks/run.py``
+    keys its JSON by name+params so the engines stop overwriting each
+    other."""
     rows = []
     cm = CostModel()
     for dims, label in [((16, 16), "pod_16x16"), ((2, 16, 16), "2pod"),
@@ -169,6 +176,19 @@ def allreduce_bandwidth():
                      f"1tree_ms={one*1e3:.2f} "
                      f"speedup_vs_ring={ring/ktree:.2f}x "
                      f"speedup_vs_1tree={one/ktree:.2f}x"))
+        pspec, pdt = _timed(lambda: pipelined_spec_from_schedule(
+            sched, ("data",)))
+        for s in (1, 8, 64):
+            ms = cm.pipelined_allreduce(b, pspec, s) * 1e3
+            rows.append((f"allreduce/{label}", pdt,
+                         f"model_ms={ms:.2f} waves={len(pspec.waves)}",
+                         {"engine": "pipelined", "segments": s}))
+        sspec, sdt = _timed(lambda: striped_spec_from_schedule(
+            sched, ("data",)))
+        ms = cm.striped_allreduce(b, sspec) * 1e3
+        rows.append((f"allreduce/{label}", sdt,
+                     f"model_ms={ms:.2f} waves={len(sspec.waves)}",
+                     {"engine": "striped", "stripes": sp.n}))
     return rows
 
 

@@ -1,9 +1,12 @@
 """Core library: the paper's star-product EDST theory + collective schedules."""
 from .collectives import (AllreduceSchedule, CostModel, FusedAllreduceSpec,
-                          PipelinedAllreduceSpec, TreeSchedule,
-                          allreduce_schedule, fused_spec_from_schedule,
+                          PipelinedAllreduceSpec, StripedCollectiveSpec,
+                          TreeSchedule, allreduce_schedule, chunk_sizes,
+                          fused_spec_from_schedule,
                           pipelined_spec_from_schedule, simulate_allreduce,
-                          simulate_wave_program, tree_schedule)
+                          simulate_striped_program, simulate_wave_program,
+                          striped_spec_from_schedule, striped_tables,
+                          tree_schedule)
 from .csr import CSRAdjacency, tree_center
 from .edst_rt import max_edsts, pack_forests
 from .edst_star import (StarEDSTs, maximal_edsts, one_sided_edsts,
@@ -18,10 +21,11 @@ from .topologies import (bundlefly, device_topology, edst_set_for, hyperx,
 
 __all__ = [
     "AllreduceSchedule", "CostModel", "FusedAllreduceSpec",
-    "PipelinedAllreduceSpec", "TreeSchedule",
-    "allreduce_schedule", "fused_spec_from_schedule",
+    "PipelinedAllreduceSpec", "StripedCollectiveSpec", "TreeSchedule",
+    "allreduce_schedule", "chunk_sizes", "fused_spec_from_schedule",
     "pipelined_spec_from_schedule", "simulate_allreduce",
-    "simulate_wave_program", "tree_schedule",
+    "simulate_striped_program", "simulate_wave_program",
+    "striped_spec_from_schedule", "striped_tables", "tree_schedule",
     "CSRAdjacency", "tree_center", "max_edsts",
     "pack_forests",
     "StarEDSTs", "maximal_edsts", "one_sided_edsts", "property_461_edsts",

@@ -12,12 +12,38 @@ packet-level simulator used for correctness tests.
 """
 from __future__ import annotations
 
+import functools
+import logging
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from .csr import tree_center
 from .graph import canon, tree_depth_levels
+
+logger = logging.getLogger(__name__)
+
+
+# ---------------------------------------------------------------------------
+# chunk apportioning (the canonical largest-remainder striping helper)
+# ---------------------------------------------------------------------------
+
+def chunk_sizes(total: int, fractions) -> tuple:
+    """Apportion ``total`` elements by largest-remainder rounding; sizes sum
+    exactly to ``total`` (a retired tree -- fraction 0 -- gets 0).
+
+    The single canonical striping helper: per-tree chunk widths
+    (``repro.dist.tree_allreduce``), weighted fault re-striping
+    (``repro.dist.fault``), and per-vertex owner stripes
+    (:func:`striped_spec_from_schedule` / :func:`striped_tables`) all
+    apportion through here, so every layer rounds identically."""
+    raw = [f * total for f in fractions]
+    sizes = [int(np.floor(r)) for r in raw]
+    leftover = total - sum(sizes)
+    order = sorted(range(len(raw)), key=lambda i: (sizes[i] - raw[i], i))
+    for i in order[:leftover]:
+        sizes[i] += 1
+    return tuple(sizes)
 
 
 # ---------------------------------------------------------------------------
@@ -421,7 +447,7 @@ def _message_dag(sched: AllreduceSchedule):
     return msgs, deps
 
 
-def _list_schedule(msgs, deps, kinds=None):
+def _list_schedule(msgs, deps, kinds=None, op_of=None):
     """Greedy list scheduling of the message DAG into ppermute-legal
     waves (unique sources AND destinations per wave), critical-path
     height first.  A message becomes ready only once every dependency is
@@ -429,7 +455,10 @@ def _list_schedule(msgs, deps, kinds=None):
     executors need: a sender's local value is complete by the time its
     wave reads it.  ``kinds`` restricts a pass to a subset of message
     kinds (the quantized program schedules reduce and broadcast
-    separately)."""
+    separately).  ``op_of`` (message -> op class) keeps each wave
+    homogeneous in arrival semantics: the striped program mixes
+    accumulate (reduce-scatter) and overwrite (allgather) messages in
+    one DAG, but an executor wave must apply a single op."""
     ids = [i for i in range(len(msgs)) if kinds is None or msgs[i][1] in kinds]
     chosen = set(ids)
     dependents: dict = {i: [] for i in ids}
@@ -447,6 +476,9 @@ def _list_schedule(msgs, deps, kinds=None):
     while pending:
         ready = sorted((i for i in pending if deps[i] <= done),
                        key=lambda i: (-height[i], msgs[i][0], msgs[i][2]))
+        if op_of is not None and ready:
+            wave_op = op_of(msgs[ready[0]])
+            ready = [i for i in ready if op_of(msgs[i]) == wave_op]
         srcs, dsts, take = set(), set(), []
         for i in ready:
             _, _, s, d = msgs[i]
@@ -514,14 +546,22 @@ def empty_pipelined_spec(n: int, axis_names) -> PipelinedAllreduceSpec:
                                   key=(n, axes, (), "pipelined"))
 
 
-def simulate_wave_program(spec: PipelinedAllreduceSpec, values: np.ndarray,
+def simulate_wave_program(spec, values: np.ndarray,
                           segments: int = 1, quantized: bool = False
                           ) -> SimResult:
     """Packet-level replay of the compiled wave program with the payload
     split into ``segments`` pipeline segments: at step t wave w moves
     segment ``t - w``, exactly as the scan executor does.  Checks that
     every vertex ends with the global sum and that no wave reuses a
-    source or destination.  ``quantized`` replays ``q8_waves``."""
+    source or destination.  ``quantized`` replays ``q8_waves``.
+
+    A :class:`StripedCollectiveSpec` dispatches to
+    :func:`simulate_striped_program` (which additionally checks
+    per-stripe conservation); striped programs carry stripe-sized
+    payloads instead of segment-streaming, so ``segments``/``quantized``
+    do not change their routing and are ignored."""
+    if isinstance(spec, StripedCollectiveSpec):
+        return simulate_striped_program(spec, values)
     n, d = values.shape
     k = spec.k
     if k == 0:
@@ -569,6 +609,488 @@ def simulate_wave_program(spec: PipelinedAllreduceSpec, values: np.ndarray,
     final = state[:, :, :m]
     ok = bool(np.allclose(final, expected[None]))
     return SimResult(ok, steps, max_load, link_bytes)
+
+
+# ---------------------------------------------------------------------------
+# striped reduce-scatter / allgather wave program
+# ---------------------------------------------------------------------------
+#
+# Every engine above ships the full m-sized chunk along every tree edge.
+# The k EDSTs expose k edge-disjoint pathways precisely so collectives can
+# *stripe*: assign each vertex an owner stripe per tree and restructure
+# each tree's traffic as reduce-scatter (partial sums flow both rootward
+# and leafward, but an edge only carries the stripes owned on the far
+# side of it) followed by allgather (finished stripes fan back out, a
+# pure gather -- arrivals overwrite, nothing accumulates).
+#
+# Owner stripes follow the tree's DFS *preorder*: the vertex with
+# preorder index i owns stripe slot i, so every subtree is a contiguous
+# slot interval [pre(c), pre(c)+size(c)) and its complement is a
+# contiguous interval of the *circular* slot space.  Each message is then
+# one circular window:
+#
+#   RS_UP   c -> p  carries the `above` window (slots owned outside
+#                   subtree(c)): subtree(c)'s partial sums flow rootward;
+#   RS_DOWN p -> c  carries the `below` window (slots owned inside
+#                   subtree(c)): everyone else's partials flow leafward;
+#   AG_UP   c -> p  carries `below`: finished subtree stripes gather up;
+#   AG_DOWN p -> c  carries `above`: the rest of the totals gather down.
+#
+# After RS every vertex holds the finished total of its OWN stripe; after
+# AG every vertex holds all of them.  An edge's window always excludes at
+# least one slot (a subtree and its complement are both non-empty), so
+# per-wave wire bytes drop from m to <= ceil(m/n) * slots-in-window --
+# the bound `simulate_striped_program` checks.
+#
+# The four kinds of every tree form ONE dependency DAG and are
+# list-scheduled together (op-homogeneous waves: reduce-scatter arrivals
+# accumulate, allgather arrivals overwrite), so a shallow tree's gather
+# overlaps a deep tree's scatter tail exactly like the pipelined engine.
+# Standalone `rs_waves` / `ag_waves` programs (each phase's sub-DAG) back
+# the first-class tree_reduce_scatter / tree_allgather collectives in
+# ``repro.dist.striped``.
+#
+# The spec is m-independent: windows are compiled in SLOT units, and
+# :func:`striped_tables` binds them to element offsets for a concrete
+# payload via the canonical largest-remainder :func:`chunk_sizes` (the
+# same helper that apportions per-tree chunk widths, so weighted fault
+# re-striping composes with ownership for free).
+
+RS_UP, RS_DOWN, AG_UP, AG_DOWN = 11, 12, 13, 14
+_RS_KINDS = frozenset({RS_UP, RS_DOWN})
+
+
+def _striped_op(msg):
+    """Arrival semantics class: reduce-scatter accumulates, allgather
+    overwrites (REDUCE/BCAST reuse the executor-facing constants)."""
+    return REDUCE if msg[1] in _RS_KINDS else BCAST
+
+
+@dataclass(frozen=True, eq=False)
+class StripedTree:
+    """One tree's ownership structure: DFS preorder slot per vertex."""
+    root: int
+    pre: np.ndarray      # (n,) int32: owner slot (preorder index) of v
+    size: np.ndarray     # (n,) int32: subtree size of v
+    parent: np.ndarray   # (n,) int32: parent vertex, -1 at the root
+
+
+@dataclass(frozen=True, eq=False)
+class StripedWave:
+    """One ppermute-legal, op-homogeneous wave in SLOT units.
+
+    ``send_slot[v]`` / ``send_nslot[v]`` name sender v's circular slot
+    window (mod n) inside tree ``send_tree[v]``'s chunk; the ``recv_*``
+    tables the matching window an arrival lands in (``recv_nslot[v]`` = 0
+    when v receives nothing).  ``op`` is REDUCE (accumulate) or BCAST
+    (overwrite) for every arrival of the wave."""
+    perm: tuple            # ((src, dst), ...) unique srcs, unique dsts
+    op: int                # REDUCE | BCAST
+    msgs: tuple            # ((tree, kind, src, dst), ...)
+    send_tree: np.ndarray  # (n,) int32
+    send_slot: np.ndarray  # (n,) int32
+    send_nslot: np.ndarray  # (n,) int32
+    recv_tree: np.ndarray  # (n,) int32
+    recv_slot: np.ndarray  # (n,) int32
+    recv_nslot: np.ndarray  # (n,) int32
+
+
+@dataclass(frozen=True, eq=False)
+class StripedCollectiveSpec:
+    """Compiled striped reduce-scatter / allgather program.
+
+    ``waves`` is the composed allreduce (reduce-scatter ∘ allgather, one
+    DAG); ``rs_waves`` / ``ag_waves`` the standalone phase programs.
+    Windows are in slot units -- :func:`striped_tables` binds a concrete
+    payload size (and optional per-tree fractions).  Hash/equality follow
+    ``key`` so cached recompiles never retrace a jitted executor."""
+    n: int
+    k: int
+    axes: tuple            # mesh axis names the collective runs over
+    depth: int             # deepest tree's level count
+    trees: tuple           # tuple[StripedTree]
+    waves: tuple           # tuple[StripedWave], composed program
+    rs_waves: tuple        # tuple[StripedWave], reduce-scatter only
+    ag_waves: tuple        # tuple[StripedWave], allgather only
+    key: tuple
+
+    @property
+    def num_collectives(self) -> int:
+        """ppermutes one composed striped allreduce issues."""
+        return len(self.waves)
+
+    def __hash__(self):
+        return hash(self.key)
+
+    def __eq__(self, other):
+        return (isinstance(other, StripedCollectiveSpec)
+                and self.key == other.key)
+
+
+def _striped_tree(n: int, ts: TreeSchedule) -> StripedTree:
+    children: dict = {}
+    for lvl in ts.bcast_rounds:
+        for p, c in lvl:
+            children.setdefault(p, []).append(c)
+    pre = np.full(n, -1, np.int32)
+    size = np.ones(n, np.int32)
+    parent = np.full(n, -1, np.int32)
+    order = []
+    stack = [ts.root]
+    while stack:                      # iterative DFS preorder
+        v = stack.pop()
+        pre[v] = len(order)
+        order.append(v)
+        for c in reversed(children.get(v, ())):
+            parent[c] = v
+            stack.append(c)
+    for v in reversed(order):         # subtree sizes, leaves first
+        if parent[v] >= 0:
+            size[parent[v]] += size[v]
+    assert len(order) == n, "tree does not span the fabric"
+    return StripedTree(ts.root, pre, size, parent)
+
+
+def _striped_dag(sched: AllreduceSchedule, trees):
+    """Messages + dependency sets of the striped program.
+
+    For edge (c, p) of tree j (c the child):
+      RS_UP(c)   needs RS_UP(g -> c) for every child g of c;
+      RS_DOWN(c) needs RS_UP(g -> p) for every OTHER child g of p, plus
+                 RS_DOWN(p) unless p is the root (the window it ships --
+                 subtree(c)'s slots -- must hold every contribution from
+                 outside subtree(c) first);
+      AG_UP(c)   needs c's reduce-scatter complete (all RS_UP into c and
+                 RS_DOWN(c): c's own stripe is finished) plus AG_UP(g)
+                 for every child (their subtree totals ride along);
+      AG_DOWN(c) needs every RS_UP into p (p's own stripe finished),
+                 AG_UP(g -> p) for every other child, and -- unless p is
+                 the root -- RS_DOWN(p) and AG_DOWN(p).
+    Message ids are appended in dependency-safe order per tree, keeping
+    the topological-order contract of :func:`_list_schedule`."""
+    msgs, deps = [], []
+    for j, st in enumerate(trees):
+        children: dict = {}
+        for v in range(sched.n):
+            if st.parent[v] >= 0:
+                children.setdefault(int(st.parent[v]), []).append(v)
+        for v in children:            # DFS preorder == slot order per level
+            children[v].sort(key=lambda c: st.pre[c])
+        rup: dict = {}
+        rdn: dict = {}
+        aup: dict = {}
+        # down-kinds walk roots-before-leaves (decreasing subtree size:
+        # every proper ancestor has a strictly larger subtree), up-kinds
+        # children-before-parents (increasing) -- keeps appended ids
+        # topologically ordered
+        by_depth = sorted((v for v in range(sched.n) if st.parent[v] >= 0),
+                          key=lambda v: -int(st.size[v]))
+        for v in sorted(range(sched.n), key=lambda v: int(st.size[v])):
+            if st.parent[v] < 0:
+                continue
+            deps.append(frozenset(rup[g] for g in children.get(v, ())))
+            rup[v] = len(msgs)
+            msgs.append((j, RS_UP, v, int(st.parent[v])))
+        # RS_DOWN roots-before-leaves: walk by decreasing subtree size
+        for v in by_depth:
+            p = int(st.parent[v])
+            d = {rup[g] for g in children.get(p, ()) if g != v}
+            if st.parent[p] >= 0:
+                d.add(rdn[p])
+            deps.append(frozenset(d))
+            rdn[v] = len(msgs)
+            msgs.append((j, RS_DOWN, p, v))
+        # AG_UP children-before-parents
+        for v in sorted(range(sched.n), key=lambda v: int(st.size[v])):
+            if st.parent[v] < 0:
+                continue
+            d = {rup[g] for g in children.get(v, ())} | {rdn[v]}
+            d |= {aup[g] for g in children.get(v, ())}
+            deps.append(frozenset(d))
+            aup[v] = len(msgs)
+            msgs.append((j, AG_UP, v, int(st.parent[v])))
+        # AG_DOWN roots-before-leaves
+        adn: dict = {}
+        for v in by_depth:
+            p = int(st.parent[v])
+            d = {rup[g] for g in children.get(p, ())}
+            d |= {aup[g] for g in children.get(p, ()) if g != v}
+            if st.parent[p] >= 0:
+                d |= {rdn[p], adn[p]}
+            deps.append(frozenset(d))
+            adn[v] = len(msgs)
+            msgs.append((j, AG_DOWN, p, v))
+    return msgs, deps
+
+
+def _striped_wave(n: int, msgs, take, trees) -> StripedWave:
+    send_tree = np.zeros(n, np.int32)
+    send_slot = np.zeros(n, np.int32)
+    send_nslot = np.zeros(n, np.int32)
+    recv_tree = np.zeros(n, np.int32)
+    recv_slot = np.zeros(n, np.int32)
+    recv_nslot = np.zeros(n, np.int32)
+    perm, taken = [], []
+    op = _striped_op(msgs[take[0]])
+    for i in take:
+        j, kind, s, d = msgs[i]
+        assert _striped_op(msgs[i]) == op, "mixed-op striped wave"
+        st = trees[j]
+        c = s if kind in (RS_UP, AG_UP) else d      # the child endpoint
+        below = (int(st.pre[c]), int(st.size[c]))
+        above = ((int(st.pre[c]) + int(st.size[c])) % n, n - int(st.size[c]))
+        slot, nslot = below if kind in (RS_DOWN, AG_UP) else above
+        perm.append((s, d))
+        taken.append((j, kind, s, d))
+        send_tree[s], send_slot[s], send_nslot[s] = j, slot, nslot
+        recv_tree[d], recv_slot[d], recv_nslot[d] = j, slot, nslot
+    return StripedWave(tuple(perm), op, tuple(taken), send_tree, send_slot,
+                       send_nslot, recv_tree, recv_slot, recv_nslot)
+
+
+_STRIPED_CACHE: dict = {}
+
+
+def striped_spec_from_schedule(sched: AllreduceSchedule,
+                               axis_names) -> StripedCollectiveSpec:
+    """Compile an :class:`AllreduceSchedule` into the striped
+    reduce-scatter / allgather :class:`StripedCollectiveSpec`.  Cached by
+    (fabric, rooted trees, axes) like the other spec compilers:
+    recompiles return the identical object, keeping jit caches stable."""
+    axes = tuple(axis_names)
+    key = (*_sched_key(sched, axes), "striped")
+    hit = _STRIPED_CACHE.get(key)
+    if hit is not None:
+        return hit
+    trees = tuple(_striped_tree(sched.n, ts) for ts in sched.trees)
+    msgs, deps = _striped_dag(sched, trees)
+    n = sched.n
+
+    def waves_of(kinds=None):
+        return tuple(_striped_wave(n, msgs, take, trees)
+                     for take in _list_schedule(msgs, deps, kinds=kinds,
+                                                op_of=_striped_op))
+
+    spec = StripedCollectiveSpec(
+        n=n, k=sched.k, axes=axes, depth=sched.depth, trees=trees,
+        waves=waves_of(), rs_waves=waves_of(_RS_KINDS),
+        ag_waves=waves_of(frozenset({AG_UP, AG_DOWN})), key=key)
+    _STRIPED_CACHE[key] = spec
+    return spec
+
+
+def empty_striped_spec(n: int, axis_names) -> StripedCollectiveSpec:
+    """The k=0 program (no trees survive): executor passes data through."""
+    axes = tuple(axis_names)
+    return StripedCollectiveSpec(n=n, k=0, axes=axes, depth=0, trees=(),
+                                 waves=(), rs_waves=(), ag_waves=(),
+                                 key=(n, axes, (), "striped"))
+
+
+# -- binding slot windows to a concrete payload -----------------------------
+
+@dataclass(frozen=True, eq=False)
+class BoundStripedWave:
+    """A :class:`StripedWave` with slot windows resolved to element
+    offsets for one payload size.  ``wire`` is the wave's padded wire
+    length (max true window length over its surviving messages);
+    windows are circular mod ``mrow``."""
+    perm: tuple
+    op: int
+    wire: int
+    send_tree: np.ndarray  # (n,) int32
+    send_off: np.ndarray   # (n,) int32: element offset of v's window
+    recv_tree: np.ndarray  # (n,) int32
+    recv_off: np.ndarray   # (n,) int32
+    recv_len: np.ndarray   # (n,) int32: true window length (0: no arrival)
+
+
+@dataclass(frozen=True, eq=False)
+class StripedTables:
+    """Element-level tables of one (spec, payload size, fractions) bind.
+
+    All trees stripe their PADDED row of width ``mrow`` through the same
+    slot->offset table ``offsets`` (padding elements are zero everywhere,
+    so reducing/gathering them is harmless and keeps every window a
+    single circular interval even under weighted fractions)."""
+    sizes: tuple           # per-tree true chunk widths (sum == payload size)
+    mrow: int              # common padded row width == max(sizes)
+    smax: int              # widest owner stripe, ceil(mrow / n)
+    offsets: np.ndarray    # (n+1,) int32: slot i owns [offsets[i], offsets[i+1])
+    own_off: np.ndarray    # (k, n) int32: offset of v's own stripe in tree j
+    own_len: np.ndarray    # (k, n) int32: width of v's own stripe in tree j
+    waves: tuple           # composed program, tuple[BoundStripedWave]
+    rs_waves: tuple
+    ag_waves: tuple
+
+
+def _bind_waves(spec, waves, offsets, mrow):
+    out = []
+    n = spec.n
+    for wv in waves:
+        send_tree = np.zeros(n, np.int32)
+        send_off = np.zeros(n, np.int32)
+        recv_tree = np.zeros(n, np.int32)
+        recv_off = np.zeros(n, np.int32)
+        recv_len = np.zeros(n, np.int32)
+        perm, wire = [], 0
+        for (j, kind, s, d), (src, dst) in zip(wv.msgs, wv.perm):
+            slot, nslot = int(wv.send_slot[s]), int(wv.send_nslot[s])
+            off = int(offsets[slot])
+            if slot + nslot <= n:
+                length = int(offsets[slot + nslot]) - off
+            else:                     # window wraps the circular slot space
+                length = (mrow - off) + int(offsets[slot + nslot - n])
+            if length == 0:
+                continue              # every slot in the window is empty
+            perm.append((src, dst))
+            wire = max(wire, length)
+            send_tree[src], send_off[src] = j, off
+            recv_tree[dst], recv_off[dst], recv_len[dst] = j, off, length
+        if perm:
+            out.append(BoundStripedWave(tuple(perm), wv.op, wire, send_tree,
+                                        send_off, recv_tree, recv_off,
+                                        recv_len))
+    return tuple(out)
+
+
+@functools.lru_cache(maxsize=256)
+def striped_tables(spec: StripedCollectiveSpec, size: int,
+                   fractions=None) -> StripedTables:
+    """Bind ``spec``'s slot windows to a concrete flattened payload of
+    ``size`` elements (optionally striped across trees by ``fractions``).
+    Owner stripes partition each tree's padded row exactly
+    (largest-remainder :func:`chunk_sizes` over the n vertices); stripes
+    can be empty when ``mrow < n`` and their messages are dropped.
+    Cached by (spec, size, fractions): trace-time rebinds are free."""
+    k = max(1, spec.k)
+    fr = tuple(fractions) if fractions is not None else (1.0 / k,) * k
+    if spec.k and len(fr) != spec.k:
+        raise ValueError(f"{len(fr)} fractions for k={spec.k} trees")
+    sizes = chunk_sizes(size, fr)
+    mrow = max(1, max(sizes) if sizes else 0)
+    n = max(1, spec.n)
+    offsets = np.zeros(n + 1, np.int32)
+    offsets[1:] = np.cumsum(chunk_sizes(mrow, (1.0 / n,) * n))
+    widths = np.diff(offsets)
+    own_off = np.zeros((spec.k, spec.n), np.int32)
+    own_len = np.zeros((spec.k, spec.n), np.int32)
+    for j, st in enumerate(spec.trees):
+        own_off[j] = offsets[:-1][st.pre]
+        own_len[j] = widths[st.pre]
+    return StripedTables(
+        sizes=sizes, mrow=mrow, smax=int(widths.max()) if n else 0,
+        offsets=offsets, own_off=own_off, own_len=own_len,
+        waves=_bind_waves(spec, spec.waves, offsets, mrow),
+        rs_waves=_bind_waves(spec, spec.rs_waves, offsets, mrow),
+        ag_waves=_bind_waves(spec, spec.ag_waves, offsets, mrow))
+
+
+@dataclass
+class StripedSimResult:
+    ok: bool
+    rounds: int
+    max_link_load: int
+    per_link_bytes: dict
+    wire_elems: tuple       # per composed wave: padded wire length
+    max_wire: int           # max over waves
+    stripes_ok: bool        # per-stripe conservation held
+
+
+def _replay_striped(state, bound_waves, mrow):
+    link_bytes: dict = {}
+    wire_elems = []
+    max_load = 0
+    for w, bw in enumerate(bound_waves):
+        srcs = [s for s, _ in bw.perm]
+        dsts = [d for _, d in bw.perm]
+        assert len(set(srcs)) == len(srcs), "wave reuses a source"
+        assert len(set(dsts)) == len(dsts), "wave reuses a destination"
+        wire_elems.append(bw.wire)
+        staged = []
+        loads: dict = {}
+        for s, d in bw.perm:
+            j = int(bw.send_tree[s])
+            off, length = int(bw.send_off[s]), int(bw.recv_len[d])
+            idxs = (off + np.arange(length)) % mrow
+            staged.append((d, j, idxs, state[s, j, idxs].copy()))
+            # like the pipelined replay, loads are DIRECTED: a wave may
+            # drive one undirected link both ways at once (full duplex)
+            loads[(s, d)] = loads.get((s, d), 0) + 1
+            link_bytes[(s, d)] = link_bytes.get((s, d), 0) + length
+        for d, j, idxs, payload in staged:
+            if bw.op == REDUCE:
+                state[d, j, idxs] += payload
+            else:
+                state[d, j, idxs] = payload
+        if loads:
+            max_load = max(max_load, max(loads.values()))
+    return link_bytes, tuple(wire_elems), max_load
+
+
+def _check_stripe_conservation(spec: StripedCollectiveSpec) -> bool:
+    """Per-stripe conservation over the composed program: every owner
+    slot of every tree crosses each of the tree's n-1 edges exactly once
+    during reduce-scatter and exactly once during allgather (in the one
+    direction its ownership dictates), and never twice on one edge in
+    one phase."""
+    n = spec.n
+    for j, st in enumerate(spec.trees):
+        tally: dict = {}
+        for wv in spec.waves:
+            for (tj, kind, s, d) in wv.msgs:
+                if tj != j:
+                    continue
+                c = s if kind in (RS_UP, AG_UP) else d
+                lo, ns = ((int(st.pre[c]), int(st.size[c]))
+                          if kind in (RS_DOWN, AG_UP) else
+                          ((int(st.pre[c]) + int(st.size[c])) % n,
+                           n - int(st.size[c])))
+                phase = "rs" if kind in _RS_KINDS else "ag"
+                for slot in ((lo + t) % n for t in range(ns)):
+                    key = (slot, canon(s, d), phase)
+                    tally[key] = tally.get(key, 0) + 1
+                    if tally[key] > 1:
+                        return False
+        edges = {canon(int(st.parent[v]), v)
+                 for v in range(n) if st.parent[v] >= 0}
+        for slot in range(n):
+            for phase in ("rs", "ag"):
+                if sum(tally.get((slot, e, phase), 0) for e in edges) \
+                        != n - 1:
+                    return False
+    return True
+
+
+def simulate_striped_program(spec: StripedCollectiveSpec, values: np.ndarray,
+                             fractions=None) -> StripedSimResult:
+    """Packet-level replay of the composed striped allreduce: checks
+    that every vertex ends with the global sum, that no wave reuses a
+    source/destination, that per-stripe conservation holds (each owner
+    slot crosses each tree edge exactly once per phase), and records the
+    per-wave wire lengths (all <= ceil(m/n) * slots-per-window < m)."""
+    n, d = values.shape
+    if spec.k == 0:
+        return StripedSimResult(False, 0, 0, {}, (), 0, False)
+    assert n == spec.n
+    bound = striped_tables(spec, d,
+                           None if fractions is None else tuple(fractions))
+    mrow = bound.mrow
+    state = np.zeros((n, spec.k, mrow))
+    off = 0
+    for j, s in enumerate(bound.sizes):
+        state[:, j, :s] = values[:, off:off + s]
+        off += s
+    expected = state.sum(0)
+    link_bytes, wire_elems, max_load = _replay_striped(state, bound.waves,
+                                                       mrow)
+    ok = bool(np.allclose(state, expected[None]))
+    return StripedSimResult(
+        ok=ok, rounds=len(bound.waves),
+        max_link_load=max_load, per_link_bytes=link_bytes,
+        wire_elems=wire_elems,
+        max_wire=max(wire_elems) if wire_elems else 0,
+        stripes_ok=_check_stripe_conservation(spec))
 
 
 # ---------------------------------------------------------------------------
@@ -632,17 +1154,68 @@ class CostModel:
     segment: int = 256 * 1024  # pipeline segment bytes
     overlap: bool = True       # can a step's disjoint-link waves overlap?
 
+    # Measured calibrations registered at runtime (e.g. loaded from the
+    # BENCH_allreduce.json "calibration/<backend>" rows) take precedence
+    # over the built-in per-backend constants below.
+    _MEASURED = {}          # plain class attrs, not dataclass fields
+    _BUILTIN = {
+        # XLA host backend (fake devices): every collective serializes at
+        # high per-call latency, so alpha dominates and pipelining never
+        # pays -- the autotuner then picks S=1, which the executor
+        # unrolls with zero pipeline overhead.
+        "cpu": {"link_bw": 2e8, "alpha": 5.5e-4, "overlap": False},
+        # the class defaults model a real fabric (per-link DMA engines:
+        # waves on disjoint links overlap), calibrated against TPU ICI
+        "tpu": {},
+    }
+    _WARNED_BACKENDS = set()
+
+    @classmethod
+    def register_calibration(cls, backend: str, **constants) -> None:
+        """Register measured constants (``link_bw`` / ``alpha`` /
+        ``segment`` / ``overlap``) for a backend; subsequent
+        :meth:`for_backend` calls -- and therefore the segment autotuner
+        -- use them.  ``benchmarks/allreduce_bench.py`` persists its
+        measurements as ``calibration/<backend>`` rows in
+        ``BENCH_allreduce.json`` and re-registers them on load."""
+        known = {f.name for f in cls.__dataclass_fields__.values()} \
+            if hasattr(cls, "__dataclass_fields__") else set()
+        bad = set(constants) - known
+        if bad:
+            raise ValueError(f"unknown CostModel constants {sorted(bad)}")
+        cls._MEASURED[backend] = dict(constants)
+
+    @classmethod
+    def calibration_for(cls, backend: str | None) -> dict | None:
+        """The constants :meth:`for_backend` would use, or ``None`` when
+        the backend has neither a measured nor a built-in calibration."""
+        if backend in cls._MEASURED:
+            return cls._MEASURED[backend]
+        return cls._BUILTIN.get(backend)
+
     @classmethod
     def for_backend(cls, backend: str | None) -> "CostModel":
-        """Constants calibrated for where the program actually runs.  The
-        defaults model a real fabric (per-link DMA engines: waves on
-        disjoint links overlap).  Host backends ("cpu": XLA fake devices)
-        serialize every collective at high per-call latency, so alpha
-        dominates and pipelining never pays -- the autotuner then picks
-        S=1, which the executor unrolls with zero pipeline overhead."""
-        if backend == "cpu":
-            return cls(link_bw=2e8, alpha=5.5e-4, overlap=False)
-        return cls()
+        """Constants calibrated for where the program actually runs:
+        measured (``register_calibration``) first, then the built-in
+        per-backend table.  A backend with NO calibration falls back to
+        the default fabric constants *explicitly*: the fallback is
+        logged (once per backend) because the segment autotuner and the
+        codec policy both read these constants, and silently modelling
+        an unknown backend as a TPU-like fabric is exactly how
+        ``segments="auto"`` mispicks."""
+        consts = cls.calibration_for(backend)
+        if consts is None:
+            if backend not in cls._WARNED_BACKENDS:
+                cls._WARNED_BACKENDS.add(backend)
+                logger.warning(
+                    "CostModel has no calibration for backend %r; falling "
+                    "back to the default fabric constants (segments='auto' "
+                    "and codec='auto' may mispick).  Run "
+                    "benchmarks/allreduce_bench.py on this backend to "
+                    "measure and persist one into BENCH_allreduce.json.",
+                    backend)
+            consts = {}
+        return cls(**consts)
 
     def pipelined_allreduce(self, nbytes: float, spec,
                             segments: int) -> float:
@@ -659,6 +1232,22 @@ class CostModel:
             return steps * (self.alpha + seg / self.link_bw)
         ncoll = waves if segments == 1 else waves * steps
         return ncoll * (self.alpha + seg / self.link_bw)
+
+    def striped_allreduce(self, nbytes: float, spec,
+                          itemsize: int = 4) -> float:
+        """Modelled cost of the composed striped program
+        (:class:`StripedCollectiveSpec`): its waves run in dependency
+        order, each shipping its bound wire length (stripe windows, not
+        the full chunk), so the per-wave wire bytes fall from ``m``
+        toward ``ceil(m/n) * slots-per-window`` at roughly twice the
+        wave count of the pipelined engine.  Bandwidth-dominated fabrics
+        win on the smaller wires; alpha-dominated hosts lose on the
+        extra waves -- which is the engine-selection tradeoff
+        ``repro.dist`` documents."""
+        elems = max(1, int(nbytes // itemsize))
+        bound = striped_tables(spec, elems)
+        return sum(self.alpha + w.wire * itemsize / self.link_bw
+                   for w in bound.waves)
 
     def best_segments(self, nbytes: float, spec, smax: int = 64) -> int:
         """The segment count minimizing :meth:`pipelined_allreduce`

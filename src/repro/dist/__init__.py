@@ -8,6 +8,9 @@ Four modules wire the paper's edge-disjoint-spanning-tree constructions
   * :mod:`repro.dist.tree_allreduce` -- the k-tree allreduce executed with
     ``ppermute`` under ``shard_map``, gradient chunks striped across the
     edge-disjoint trees;
+  * :mod:`repro.dist.striped`        -- first-class tree_reduce_scatter /
+    tree_allgather / striped_allreduce collectives: owner stripes per
+    vertex, stripe-sized wires instead of full-chunk hops;
   * :mod:`repro.dist.steps`          -- sharded train steps with selectable
     gradient sync (gspmd | psum_dp | edst) and the mesh -> star-product
     decomposition chooser;
@@ -23,6 +26,8 @@ from . import compat as _compat
 
 _compat.install()
 
-from . import fault, pipeline, sharding, steps, tree_allreduce  # noqa: E402
+from . import (fault, pipeline, sharding, steps,  # noqa: E402
+               striped, tree_allreduce)
 
-__all__ = ["sharding", "steps", "tree_allreduce", "pipeline", "fault"]
+__all__ = ["sharding", "steps", "striped", "tree_allreduce", "pipeline",
+           "fault"]

@@ -38,9 +38,11 @@ import numpy as np
 
 from ..core.collectives import (AllreduceSchedule, CostModel,
                                 FusedAllreduceSpec, PipelinedAllreduceSpec,
-                                allreduce_schedule, empty_pipelined_spec,
+                                StripedCollectiveSpec, allreduce_schedule,
+                                empty_pipelined_spec, empty_striped_spec,
                                 pipelined_spec_from_schedule,
-                                simulate_allreduce)
+                                simulate_allreduce,
+                                striped_spec_from_schedule)
 from ..core.edst_rt import max_edsts
 from ..core.fault import FailureEvent, rebalance_chunks
 from ..core.graph import Graph, canon
@@ -60,9 +62,13 @@ class NoScheduleError(RuntimeError):
 
 @dataclass(frozen=True)
 class ScheduleEntry:
-    """One precompiled failure-class program."""
+    """One precompiled failure-class program.  ``spec`` carries the
+    runtime's engine form: the pipelined wave program by default, or the
+    striped reduce-scatter/allgather program when the runtime was built
+    with ``engine="striped"`` (a link kill then re-stripes ownership
+    over the surviving k-1 trees instead of just re-weighting chunks)."""
     name: str                      # "full" | "degraded/tree<j>" | "rebuilt/tree<j>"
-    spec: PipelinedAllreduceSpec   # pipelined wave program (static)
+    spec: PipelinedAllreduceSpec | StripedCollectiveSpec
     fractions: tuple               # per-tree chunk fractions, sum 1
     sched: AllreduceSchedule | None  # core schedule (cost model / simulator)
 
@@ -85,27 +91,35 @@ def striped_tree_allreduce(x, spec, fractions, quantize: bool = False,
     """Weighted-stripe k-tree allreduce: contiguous slice j of the flattened
     array (``chunk_sizes(size, fractions)[j]`` elements) travels tree j.
 
-    Dispatches on the spec form (pipelined wave program by default, fused
-    round-major for A/B runs); either engine runs the unequal slices
-    padded to a common row width, so degraded (k-1)-striping shares the
-    healthy program's wave structure.
+    Dispatches on the spec form (pipelined wave program by default,
+    striped reduce-scatter/allgather for ``engine="striped"`` runtimes,
+    fused round-major for A/B runs); every engine runs the unequal
+    slices padded to a common row width, so degraded (k-1)-striping
+    shares the healthy program's wave structure.
     """
     if spec.k == 0:
         return x
+    if isinstance(spec, StripedCollectiveSpec):
+        from .striped import striped_allreduce
+        return striped_allreduce(x, spec, quantize, fractions=fractions)
     if isinstance(spec, FusedAllreduceSpec):
         return fused_tree_allreduce(x, spec, quantize, fractions=fractions)
     return pipelined_tree_allreduce(x, spec, quantize, segments=segments,
                                     fractions=fractions)
 
 
-def _entry(name: str, n: int, trees, axes) -> ScheduleEntry:
+def _entry(name: str, n: int, trees, axes,
+           engine: str = "pipelined") -> ScheduleEntry:
     trees = [frozenset(canon(*e) for e in t) for t in trees]
+    empty = (empty_striped_spec if engine == "striped"
+             else empty_pipelined_spec)
+    compile_spec = (striped_spec_from_schedule if engine == "striped"
+                    else pipelined_spec_from_schedule)
     if not trees:
-        return ScheduleEntry(name, empty_pipelined_spec(n, axes), (), None)
+        return ScheduleEntry(name, empty(n, axes), (), None)
     sched = allreduce_schedule(n, trees)
     fracs = tuple(rebalance_chunks(sched, {}))
-    return ScheduleEntry(name, pipelined_spec_from_schedule(sched, axes),
-                         fracs, sched)
+    return ScheduleEntry(name, compile_spec(sched, axes), fracs, sched)
 
 
 # ---------------------------------------------------------------------------
@@ -129,16 +143,22 @@ class FaultAwareAllreduce:
     entries: tuple                 # tuple[ScheduleEntry]
     active: int = 0
     history: list = field(default_factory=list)
+    engine: str = "pipelined"      # compiled form of every entry's spec
 
     @classmethod
-    def build(cls, graph: Graph, trees, axis_names) -> "FaultAwareAllreduce":
+    def build(cls, graph: Graph, trees, axis_names,
+              engine: str = "pipelined") -> "FaultAwareAllreduce":
+        if engine not in ("pipelined", "striped"):
+            raise ValueError(
+                f"engine {engine!r} not in ('pipelined', 'striped')")
         trees = [frozenset(canon(*e) for e in t) for t in trees]
         axes = tuple(axis_names)
         k = len(trees)
-        entries = [_entry("full", graph.n, trees, axes)]
+        entries = [_entry("full", graph.n, trees, axes, engine)]
         for j in range(k):
             keep = trees[:j] + trees[j + 1:]
-            entries.append(_entry(f"degraded/tree{j}", graph.n, keep, axes))
+            entries.append(_entry(f"degraded/tree{j}", graph.n, keep, axes,
+                                  engine))
         for j in range(k):
             # class rebuild: drop ALL of tree j's links, so the repacked
             # trees avoid any single link failure attributable to tree j
@@ -146,8 +166,9 @@ class FaultAwareAllreduce:
             rebuilt = max_edsts(residual)[0] if residual.is_connected() else []
             if not rebuilt:  # k=1 fabrics: nothing to repack from
                 rebuilt = trees[:j] + trees[j + 1:]
-            entries.append(_entry(f"rebuilt/tree{j}", graph.n, rebuilt, axes))
-        return cls(graph, axes, tuple(entries))
+            entries.append(_entry(f"rebuilt/tree{j}", graph.n, rebuilt, axes,
+                                  engine))
+        return cls(graph, axes, tuple(entries), engine=engine)
 
     @property
     def k(self) -> int:
@@ -204,7 +225,8 @@ class FaultAwareAllreduce:
         trees, _ = max_edsts(residual)
         if not trees:
             raise NoScheduleError("residual fabric packs no spanning tree")
-        rebuilt = FaultAwareAllreduce.build(residual, trees, self.axes)
+        rebuilt = FaultAwareAllreduce.build(residual, trees, self.axes,
+                                           engine=self.engine)
         rebuilt.history = self.history + [("with_rebuild", len(trees))]
         return rebuilt
 

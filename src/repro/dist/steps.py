@@ -40,9 +40,10 @@ from jax.sharding import PartitionSpec as P
 
 from ..core import topologies as topo
 from ..core.collectives import (FusedAllreduceSpec, PipelinedAllreduceSpec,
-                                allreduce_schedule,
+                                StripedCollectiveSpec, allreduce_schedule,
                                 fused_spec_from_schedule,
-                                pipelined_spec_from_schedule)
+                                pipelined_spec_from_schedule,
+                                striped_spec_from_schedule)
 from ..core.edst_star import star_edsts
 from . import sharding as shd
 from .compat import shard_map
@@ -98,37 +99,46 @@ def _edst_spec_cached(mesh_shape, axis_names, dp_torus_shape, engine):
     sched = allreduce_schedule(sp.n, star_edsts(sp).trees)
     if engine == "fused":
         return fused_spec_from_schedule(sched, names)
+    if engine == "striped":
+        return striped_spec_from_schedule(sched, names)
     return pipelined_spec_from_schedule(sched, names)
+
+
+ENGINES = ("pipelined", "fused", "striped")
 
 
 def edst_spec_for_mesh(
         mesh_shape, axis_names, dp_torus_shape=None,
         engine: str = "pipelined"
-) -> PipelinedAllreduceSpec | FusedAllreduceSpec:
+) -> PipelinedAllreduceSpec | FusedAllreduceSpec | StripedCollectiveSpec:
     """EDST allreduce spec for the data-parallel fabric of a device mesh
     (see :func:`dp_fabric_for_mesh` for the fabric choice).  ``engine``
     picks the compiled form: ``"pipelined"`` (default -- the list-
-    scheduled segment-streaming wave program) or ``"fused"`` (the
-    round-aligned A/B baseline).  Specs are cached by (topology, axes,
-    engine): repeated calls -- every train-step build, every elastic
-    rescale probe -- return the same object, so jitted executors taking
-    the spec statically never retrace."""
-    if engine not in ("pipelined", "fused"):
-        raise ValueError(f"engine {engine!r} not in ('pipelined', 'fused')")
+    scheduled segment-streaming wave program), ``"striped"`` (the
+    reduce-scatter/allgather program of :mod:`repro.dist.striped`:
+    stripe-sized wires for bandwidth-dominated fabrics) or ``"fused"``
+    (the round-aligned A/B baseline).  Specs are cached by (topology,
+    axes, engine): repeated calls -- every train-step build, every
+    elastic rescale probe -- return the same object, so jitted executors
+    taking the spec statically never retrace."""
+    if engine not in ENGINES:
+        raise ValueError(f"engine {engine!r} not in {ENGINES}")
     return _edst_spec_cached(
         tuple(mesh_shape), tuple(axis_names),
         None if dp_torus_shape is None else tuple(dp_torus_shape), engine)
 
 
-def fault_runtime_for_mesh(mesh_shape, axis_names,
-                           dp_torus_shape=None) -> FaultAwareAllreduce:
+def fault_runtime_for_mesh(mesh_shape, axis_names, dp_torus_shape=None,
+                           engine: str = "pipelined") -> FaultAwareAllreduce:
     """Elastic EDST runtime (precompiled degraded/rebuilt failure-class
     schedules) for the data-parallel fabric of a device mesh.  Pass the
     result to ``make_train_step(mode="edst", fault_runtime=...)`` and feed
-    its schedule ids into the step's ``schedule_id`` argument."""
+    its schedule ids into the step's ``schedule_id`` argument.
+    ``engine`` selects the compiled program form of every failure class
+    (striped classes re-stripe ownership over the surviving trees)."""
     sp, names = dp_fabric_for_mesh(mesh_shape, axis_names, dp_torus_shape)
     return FaultAwareAllreduce.build(sp.product(), star_edsts(sp).trees,
-                                     names)
+                                     names, engine=engine)
 
 
 # ---------------------------------------------------------------------------
@@ -138,8 +148,12 @@ def fault_runtime_for_mesh(mesh_shape, axis_names,
 def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
                     grad_accum: int = 1, quantize: bool = False,
                     dp_torus_shape=None, fault_runtime=None,
-                    segments="auto"):
+                    segments="auto", engine: str = "pipelined"):
     """Build the jittable train step.  See module docstring for ``mode``.
+
+    ``engine`` (``mode="edst"``, ignored when a ``fault_runtime`` carries
+    its own engine) selects the compiled allreduce form -- see
+    :func:`edst_spec_for_mesh`.
 
     ``fault_runtime`` (a :class:`repro.dist.fault.FaultAwareAllreduce`,
     ``mode="edst"`` only) makes the step failure-event aware: its signature
@@ -174,7 +188,7 @@ def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
         else:
             tree_spec = edst_spec_for_mesh(tuple(mesh.devices.shape),
                                            tuple(mesh.axis_names),
-                                           dp_torus_shape)
+                                           dp_torus_shape, engine=engine)
 
     # FSDP is expressed through the shardings callers place params/opt state
     # with (``sharding.tree_shardings(..., fsdp=fsdp)``, e.g. as jit

@@ -54,7 +54,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.collectives import (CostModel, FusedAllreduceSpec,
-                                PipelinedAllreduceSpec)
+                                PipelinedAllreduceSpec,
+                                StripedCollectiveSpec, chunk_sizes)
 from ..kernels.tree_combine.ops import (combine, q8_combine, q8_pack,
                                         q8_pack_rows, q8_unpack,
                                         q8_unpack_rows)
@@ -142,20 +143,10 @@ def spec_from_schedule(sched, axis_names) -> TreeAllreduceSpec:
                              trees=tuple(trees))
 
 
-# ---------------------------------------------------------------------------
-# chunk apportioning (shared by uniform and weighted striping)
-# ---------------------------------------------------------------------------
-
-def chunk_sizes(total: int, fractions) -> tuple:
-    """Apportion ``total`` elements to trees by largest-remainder rounding;
-    sizes sum exactly to ``total`` (a retired tree -- fraction 0 -- gets 0)."""
-    raw = [f * total for f in fractions]
-    sizes = [int(np.floor(r)) for r in raw]
-    leftover = total - sum(sizes)
-    order = sorted(range(len(raw)), key=lambda i: (sizes[i] - raw[i], i))
-    for i in order[:leftover]:
-        sizes[i] += 1
-    return tuple(sizes)
+# chunk apportioning: the canonical largest-remainder helper lives in
+# repro.core.collectives (owner-stripe assignment needs it at the core
+# layer); imported above and re-exported here because the executors and
+# repro.dist.fault historically import it from this module.
 
 
 # ---------------------------------------------------------------------------
@@ -682,13 +673,20 @@ def tree_allreduce(x, spec, quantize: bool = False, segments="auto"):
     Dispatches on the spec form: a
     :class:`repro.core.collectives.PipelinedAllreduceSpec` runs the
     pipelined segmented engine (the default the rest of the stack
-    compiles), a :class:`repro.core.collectives.FusedAllreduceSpec` the
-    fused global-round baseline, a :class:`TreeAllreduceSpec` the
-    per-tree chains.  All return the summed array in the original shape
+    compiles), a :class:`repro.core.collectives.StripedCollectiveSpec`
+    the striped reduce-scatter/allgather engine
+    (:mod:`repro.dist.striped`; stripe windows replace segment streaming,
+    so ``segments`` does not apply), a
+    :class:`repro.core.collectives.FusedAllreduceSpec` the fused
+    global-round baseline, a :class:`TreeAllreduceSpec` the per-tree
+    chains.  All return the summed array in the original shape
     (replicated across the fabric).
     """
     if isinstance(spec, PipelinedAllreduceSpec):
         return pipelined_tree_allreduce(x, spec, quantize, segments)
+    if isinstance(spec, StripedCollectiveSpec):
+        from .striped import striped_allreduce  # late: striped imports us
+        return striped_allreduce(x, spec, quantize=quantize)
     if isinstance(spec, FusedAllreduceSpec):
         return fused_tree_allreduce(x, spec, quantize)
     return per_tree_allreduce(x, spec, quantize)

@@ -54,6 +54,9 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quantize-grads", action="store_true")
+    ap.add_argument("--edst-engine", default="pipelined",
+                    choices=["pipelined", "striped", "fused"],
+                    help="compiled allreduce form for --sync edst")
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch)
@@ -72,7 +75,8 @@ def main(argv=None):
         opt_state = opt.init(params)
 
         step_fn = make_train_step(api, opt, mesh, mode=args.sync,
-                                  quantize=args.quantize_grads)
+                                  quantize=args.quantize_grads,
+                                  engine=args.edst_engine)
         jstep = jax.jit(step_fn, donate_argnums=(0, 1))
 
         start = 0

@@ -228,3 +228,213 @@ def test_bench_diff_gates_regressions():
            "exec/t/psum": {"us_per_call": 10.0}}
     _, regs = bd.diff(base, bad, threshold=1.25)
     assert regs == ["exec/t/fused"]
+
+
+# ---------------------------------------------------------------------------
+# striped reduce-scatter / allgather program (owner stripes per vertex)
+# ---------------------------------------------------------------------------
+
+from repro.core import (chunk_sizes,  # noqa: E402
+                        simulate_striped_program,
+                        striped_spec_from_schedule, striped_tables)
+from repro.core.collectives import (AG_DOWN, AG_UP,  # noqa: E402
+                                    RS_DOWN, RS_UP, empty_striped_spec)
+
+
+def _striped_for(dims):
+    sp = topo.device_topology(dims)
+    sched = allreduce_schedule(sp.n, star_edsts(sp).trees)
+    return sched, striped_spec_from_schedule(sched, ("data",))
+
+
+@settings(max_examples=12, deadline=None)
+@given(total=st.integers(1, 4096), seed=st.integers(0, 10_000))
+def test_chunk_sizes_partitions_exactly(total, seed):
+    """Property: the canonical largest-remainder helper partitions any
+    total exactly, for uneven fractions and retired (fraction-0) trees."""
+    import random
+    rng = random.Random(seed)
+    k = rng.randint(1, 6)
+    weights = [rng.random() for _ in range(k)]
+    if k > 1 and rng.random() < 0.5:
+        weights[rng.randrange(k)] = 0.0   # retired tree
+    s = sum(weights) or 1.0
+    fracs = [w / s for w in weights]
+    sizes = chunk_sizes(total, fracs)
+    assert sum(sizes) == total
+    assert all(sz >= 0 for sz in sizes)
+    assert all(sz == 0 for sz, f in zip(sizes, fracs) if f == 0.0)
+
+
+def test_chunk_sizes_is_canonical_everywhere():
+    """The dedup satellite: dist.tree_allreduce and dist.fault re-export
+    the ONE core helper instead of reimplementing the rounding."""
+    from repro.core.collectives import chunk_sizes as core_cs
+    from repro.dist.fault import chunk_sizes as fault_cs
+    from repro.dist.tree_allreduce import chunk_sizes as dist_cs
+    assert dist_cs is core_cs
+    assert fault_cs is core_cs
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.sampled_from([1, 3, 7, 15, 16, 17, 53, 256, 257]),
+       seed=st.integers(0, 1000))
+def test_owner_stripes_partition_padded_rows(m, seed):
+    """Property: per tree, the n owner stripes partition the padded row
+    exactly -- uneven m, m < n, and weighted fractions with a retired
+    tree all included."""
+    import random
+    sched, spec = _striped_for((4, 4))
+    rng = random.Random(seed)
+    fr = None
+    if sched.k >= 2 and rng.random() < 0.5:
+        fr = [rng.random() for _ in range(sched.k)]
+        if rng.random() < 0.5:
+            fr[rng.randrange(sched.k)] = 0.0
+        s = sum(fr) or 1.0
+        fr = tuple(f / s for f in fr)
+    bound = striped_tables(spec, m, fr)
+    assert sum(bound.sizes) == m              # true chunks partition m
+    assert bound.mrow == max(bound.sizes)
+    widths = np.diff(bound.offsets)
+    assert bound.offsets[0] == 0 and bound.offsets[-1] == bound.mrow
+    assert (widths >= 0).all() and widths.max() == bound.smax
+    for j, st_tree in enumerate(spec.trees):
+        # each vertex's own stripe is exactly its preorder slot
+        assert (bound.own_off[j] == bound.offsets[:-1][st_tree.pre]).all()
+        assert (bound.own_len[j] == widths[st_tree.pre]).all()
+        assert int(bound.own_len[j].sum()) == bound.mrow
+
+
+def test_striped_wave_legality_and_op_homogeneity():
+    sched, spec = _striped_for((4, 4))
+    n, k = sched.n, sched.k
+    for waves, ops in ((spec.waves, {REDUCE, BCAST}),
+                       (spec.rs_waves, {REDUCE}),
+                       (spec.ag_waves, {BCAST})):
+        for wv in waves:
+            srcs = [s for s, _ in wv.perm]
+            dsts = [d for _, d in wv.perm]
+            assert len(set(srcs)) == len(srcs), "wave reuses a source"
+            assert len(set(dsts)) == len(dsts), "wave reuses a destination"
+            assert wv.op in ops
+            for (j, kind, s, d) in wv.msgs:
+                assert (wv.op == REDUCE) == (kind in (RS_UP, RS_DOWN))
+    # conservation: 2 messages per phase per tree edge (one each way)
+    n_msgs = sum(len(wv.msgs) for wv in spec.waves)
+    assert n_msgs == 4 * sum(len(ts.tree) for ts in sched.trees)
+
+
+@pytest.mark.parametrize("dims", [(4, 4), (2, 8), (3, 3), (2, 4, 4)])
+@pytest.mark.parametrize("d_mult", [1, 8])
+def test_striped_simulator_exact_and_conserving(dims, d_mult):
+    sched, spec = _striped_for(dims)
+    d = d_mult * sched.n * sched.k + 3    # uneven; d_mult=1 keeps m >= n
+    vals = np.random.RandomState(d).randn(sched.n, d)
+    sim = simulate_striped_program(spec, vals)
+    assert sim.ok
+    assert sim.stripes_ok, "per-stripe conservation violated"
+    assert sim.max_link_load == 1
+
+
+@pytest.mark.parametrize("mk", [
+    lambda: topo.device_topology((4, 4)),
+    lambda: topo.hyperx([4, 4]),
+    lambda: topo.slimfly(5),
+    lambda: topo.polarstar(3, "qr", 5),
+], ids=["torus4x4", "hyperx4x4", "slimfly_q5", "polarstar_er3_qr5"])
+def test_striped_conservation_on_paper_fabrics(mk):
+    sp = mk()
+    g = sp.product()
+    sched = allreduce_schedule(g.n, star_edsts(sp).trees)
+    spec = striped_spec_from_schedule(sched, ("data",))
+    vals = np.random.RandomState(7).randn(g.n, 4 * sched.k + 1)
+    sim = simulate_striped_program(spec, vals)
+    assert sim.ok and sim.stripes_ok
+
+
+def test_striped_wire_bytes_bounded_below_m():
+    """Acceptance: per-wave wire bytes drop from m to
+    <= ceil(m/n) * slots-in-window, strictly below m once m >= n."""
+    sched, spec = _striped_for((4, 4))
+    n = sched.n
+    m = 8 * n                              # m >= n: no empty stripes
+    vals = np.random.RandomState(3).randn(n, m * sched.k)
+    sim = simulate_striped_program(spec, vals)
+    bound = striped_tables(spec, m * sched.k)
+    assert sim.ok and sim.stripes_ok
+    assert bound.mrow == m
+    # no empty stripe -> no dropped message, so bound and spec waves align
+    for bw, wv, wire in zip(bound.waves, spec.waves, sim.wire_elems):
+        assert wire == int(bw.recv_len.max())
+        for _, dst in bw.perm:
+            nslot = int(wv.recv_nslot[dst])
+            assert 1 <= nslot <= n - 1
+            assert int(bw.recv_len[dst]) <= bound.smax * nslot
+    assert sim.max_wire <= bound.smax * (n - 1)
+    assert sim.max_wire < m
+
+
+@settings(max_examples=6, deadline=None)
+@given(drop=st.integers(0, 1), seed=st.integers(0, 1000))
+def test_striped_degraded_k_minus_1_restripes(drop, seed):
+    """Property: the (k-1)-tree spec a link kill degrades to re-stripes
+    ownership over the survivors and still sums exactly."""
+    sp = topo.device_topology((4, 4))
+    trees = star_edsts(sp).trees
+    keep = [t for j, t in enumerate(trees) if j != drop]
+    sched = allreduce_schedule(sp.n, keep)
+    spec = striped_spec_from_schedule(sched, ("data",))
+    assert spec.k == len(trees) - 1
+    vals = np.random.RandomState(seed).randn(sp.n, 29)
+    sim = simulate_striped_program(spec, vals)
+    assert sim.ok and sim.stripes_ok
+    for st_tree in spec.trees:             # ownership covers every vertex
+        assert sorted(st_tree.pre.tolist()) == list(range(sp.n))
+
+
+def test_striped_spec_cache_and_empty():
+    sched, spec = _striped_for((4, 4))
+    assert striped_spec_from_schedule(sched, ("data",)) is spec
+    assert spec.num_collectives == len(spec.waves)
+    empty = empty_striped_spec(16, ("data",))
+    assert empty.k == 0 and empty.waves == ()
+    # simulate_wave_program dispatches striped specs to the striped replay
+    vals = np.random.RandomState(0).randn(sched.n, 10)
+    assert simulate_wave_program(spec, vals).stripes_ok
+
+
+def test_cost_model_striped_entry():
+    sched, spec = _striped_for((4, 4))
+    cm = CostModel()
+    b = 64 << 20
+    t = cm.striped_allreduce(b, spec)
+    assert 0 < t < float("inf")
+    # stripe-sized wires: the modelled striped wire total undercuts the
+    # full-chunk wire total of the same wave count
+    full_chunk = spec.num_collectives * (cm.alpha + (b / sched.k)
+                                         / cm.link_bw)
+    assert t < full_chunk
+
+
+def test_cost_model_backend_calibration_registry(caplog):
+    import logging
+    CostModel._WARNED_BACKENDS.discard("test_backend_xyz")
+    CostModel._MEASURED.pop("test_backend_xyz", None)
+    assert CostModel.calibration_for("cpu") is not None
+    assert CostModel.calibration_for("tpu") is not None
+    assert CostModel.calibration_for("test_backend_xyz") is None
+    with caplog.at_level(logging.WARNING, "repro.core.collectives"):
+        cm = CostModel.for_backend("test_backend_xyz")
+        assert cm == CostModel()           # explicit default fallback
+        assert any("no calibration" in r.message for r in caplog.records)
+        n_warnings = len(caplog.records)
+        CostModel.for_backend("test_backend_xyz")   # warns once per backend
+        assert len(caplog.records) == n_warnings
+    CostModel.register_calibration("test_backend_xyz", alpha=1e-5,
+                                   link_bw=1e9, overlap=False)
+    cm = CostModel.for_backend("test_backend_xyz")
+    assert cm.alpha == 1e-5 and cm.link_bw == 1e9 and not cm.overlap
+    with pytest.raises(ValueError):
+        CostModel.register_calibration("test_backend_xyz", bogus=1.0)
+    CostModel._MEASURED.pop("test_backend_xyz", None)

@@ -220,3 +220,25 @@ def test_effective_bandwidth_degrades_gracefully():
     rep = rt.report(nbytes)
     assert len(rep["entries"]) == len(rt.entries)
     assert rep["entries"][0]["gbps"] == pytest.approx(full / 1e9)
+
+
+def test_striped_engine_runtime_entries():
+    """engine="striped" runtimes carry striped specs in every failure
+    class, so a link kill re-stripes ownership over the k-1 survivors."""
+    from repro.core.collectives import StripedCollectiveSpec
+    sp = topo.device_topology((4, 4))
+    g = sp.product()
+    trees = star_edsts(sp).trees
+    rt = FaultAwareAllreduce.build(g, trees, ("data",), engine="striped")
+    assert rt.engine == "striped"
+    assert all(isinstance(e.spec, StripedCollectiveSpec)
+               for e in rt.entries)
+    assert [e.spec.k for e in rt.entries[1:len(trees) + 1]] \
+        == [len(trees) - 1] * len(trees)
+    # failure flip + verify_entry run on the same core schedules
+    dead = next(iter(rt.entries[0].sched.trees[0].tree))
+    rt2 = rt.on_failure(FailureEvent(links=frozenset({dead})))
+    assert rt2.active != 0 and rt2.engine == "striped"
+    assert rt.verify_entry(rt2.active)
+    with pytest.raises(ValueError):
+        FaultAwareAllreduce.build(g, trees, ("data",), engine="bogus")
