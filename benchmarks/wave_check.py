@@ -1,132 +1,34 @@
-"""CI legality gate for every compiled allreduce engine: replay the wave
-programs of all engines through the NumPy packet simulators on the five
-paper topology families and fail on any violated invariant.
+"""DEPRECATED thin alias: the CI legality gate moved into the static
+wave-program verifier CLI (:mod:`repro.analysis.verify`).
 
-Per topology (torus, HyperX, Slim Fly, PolarStar, BundleFly -- the
-networks of the paper's Tables 1-3) and its maximal EDST schedule:
+``python -m benchmarks.wave_check`` now runs
 
-  * per-tree engine  -- ``simulate_allreduce``: exact sums, link load 1
-    (edge-disjointness: no physical link ever carries two messages);
-  * fused engine     -- every wave ppermute-legal (unique sources and
-    destinations) and message conservation (each tree edge carries
-    exactly one reduce and one broadcast message);
-  * pipelined engine -- ``simulate_wave_program`` at S in {1, 4}, f32
-    and quantized programs: exact sums, steps == waves + S - 1,
-    per-directed-link exclusivity;
-  * striped engine   -- ``simulate_striped_program``: exact sums,
-    per-stripe conservation (each owner slot crosses each tree edge
-    exactly once per phase), and the wire-bytes bound (every wave's
-    wire <= ceil(m/n) * slots-per-window, strictly < m when m >= n).
+    python -m repro.analysis.verify --all-engines --topologies paper5 \
+        --simulate
 
-Run from CI as ``python -m benchmarks.wave_check`` (pure NumPy -- no
-fake-device subprocesses, a few seconds per topology).
+i.e. the *static* verifier (partial-bijection waves, link races,
+happens-before, edge-disjointness recovered from the routing tables,
+stripe-window conservation) on every engine and paper topology, plus the
+NumPy packet-simulator replays this script used to run (``--simulate``).
+Prefer invoking the verifier module directly; this shim exists so older
+CI configs and docs keep working.
 """
 from __future__ import annotations
 
 import os
 import sys
 
-import numpy as np
-
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
 
-from repro.core import topologies as topo  # noqa: E402
-from repro.core.collectives import (allreduce_schedule,  # noqa: E402
-                                    fused_spec_from_schedule,
-                                    pipelined_spec_from_schedule,
-                                    simulate_allreduce,
-                                    simulate_striped_program,
-                                    simulate_wave_program,
-                                    striped_spec_from_schedule,
-                                    striped_tables)
-from repro.core.edst_star import star_edsts  # noqa: E402
-from repro.core.topologies import edst_set_for  # noqa: E402
-
-TOPOLOGIES = (
-    ("torus4x4", lambda: topo.device_topology((4, 4)), None),
-    ("hyperx4x4", lambda: topo.hyperx([4, 4]), None),
-    ("slimfly_q5", lambda: topo.slimfly(5), None),
-    ("polarstar_er3_qr5", lambda: topo.polarstar(3, "qr", 5), None),
-    ("bundlefly_q4_a5", lambda: topo.bundlefly(4, 5),
-     lambda: edst_set_for(topo.slimfly(4))),
-)
-
-
-def check_topology(label: str, sp, es=None) -> list:
-    failures = []
-    res = star_edsts(sp, Es=es) if es is not None else star_edsts(sp)
-    sched = allreduce_schedule(sp.product().n, res.trees)
-    n, k = sched.n, sched.k
-    rng = np.random.RandomState(sum(map(ord, label)))
-    d = 8 * k + 3                         # uneven on purpose
-    vals = rng.randn(n, d)
-
-    # per-tree engine: the schedule executed literally (needs d % k == 0)
-    sim = simulate_allreduce(sched, rng.randn(n, 8 * k))
-    if not sim.ok:
-        failures.append("per_tree: wrong sums")
-    if sim.max_link_load != 1:
-        failures.append(f"per_tree: link load {sim.max_link_load} != 1")
-
-    # fused engine: wave legality + message conservation
-    fspec = fused_spec_from_schedule(sched, ("data",))
-    seen = []
-    for rnd in fspec.reduce_rounds + fspec.bcast_rounds:
-        srcs = [s for s, _ in rnd.perm]
-        dsts = [t for _, t in rnd.perm]
-        if len(set(srcs)) != len(srcs) or len(set(dsts)) != len(dsts):
-            failures.append("fused: wave reuses a source/destination")
-        seen.extend(rnd.perm)
-    if len(seen) != 2 * sum(len(ts.tree) for ts in sched.trees):
-        failures.append("fused: message conservation violated")
-
-    # pipelined engine: segment-streamed replay, f32 and quantized
-    pspec = pipelined_spec_from_schedule(sched, ("data",))
-    for segments in (1, 4):
-        for q in (False, True):
-            sim = simulate_wave_program(pspec, vals, segments, quantized=q)
-            if not sim.ok:
-                failures.append(f"pipelined: wrong sums (S={segments} q={q})")
-            if sim.max_link_load != 1:
-                failures.append(
-                    f"pipelined: directed-link load {sim.max_link_load}"
-                    f" != 1 (S={segments} q={q})")
-
-    # striped engine: per-stripe conservation + wire-bytes bound
-    sspec = striped_spec_from_schedule(sched, ("data",))
-    ssim = simulate_striped_program(sspec, vals)
-    bound = striped_tables(sspec, d)
-    if not ssim.ok:
-        failures.append("striped: wrong sums")
-    if not ssim.stripes_ok:
-        failures.append("striped: per-stripe conservation violated")
-    for bw, wire in zip(bound.waves, ssim.wire_elems):
-        if wire != int(bw.recv_len.max()):
-            failures.append("striped: wave wire != max window length")
-        if wire > bound.smax * (n - 1):
-            failures.append(
-                f"striped: wire {wire} exceeds ceil(m/n) * (n-1) slots")
-    if bound.mrow >= n and ssim.max_wire >= bound.mrow:
-        failures.append(
-            f"striped: max wire {ssim.max_wire} not < m {bound.mrow}")
-    return failures
+from repro.analysis.verify import main as _verify_main  # noqa: E402
 
 
 def main() -> int:
-    bad = 0
-    for label, mk, mk_es in TOPOLOGIES:
-        sp = mk()
-        es = mk_es() if mk_es is not None else None
-        failures = check_topology(label, sp, es)
-        status = "ok" if not failures else "FAIL"
-        print(f"wave_check/{label}: {status}"
-              + "".join(f"\n  - {f}" for f in failures))
-        bad += len(failures)
-    if bad:
-        print(f"\n{bad} invariant violation(s)")
-        return 1
-    print("\nall engines legal on all paper topologies")
-    return 0
+    print("benchmarks.wave_check is deprecated; running "
+          "`python -m repro.analysis.verify --all-engines "
+          "--topologies paper5 --simulate`\n", file=sys.stderr)
+    return _verify_main(["--all-engines", "--topologies", "paper5",
+                         "--simulate"])
 
 
 if __name__ == "__main__":

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Static verification gate (the CI `verify` job, runnable locally):
+#
+#   scripts/verify.sh                # verifier CLI + AST lint (+ ruff
+#                                    # when installed) -- seconds, no JAX
+#   scripts/verify.sh --simulate     # extra args go to the verifier CLI
+#                                    # (here: add the packet-simulator
+#                                    # replays, the old wave_check gate)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -m repro.analysis.verify --all-engines --topologies paper5 "$@"
+python -m repro.analysis.lint src
+if command -v ruff >/dev/null 2>&1; then
+    ruff check .
+else
+    echo "ruff not installed; skipping ruff baseline (CI runs it)"
+fi

@@ -1,2 +1,30 @@
-from .hlo import HloStats, analyze_hlo
-from .roofline import RooflineTerms, roofline
+"""Static analysis: loop-aware HLO accounting (:mod:`.hlo`), roofline
+terms (:mod:`.roofline`), the static wave-program verifier
+(:mod:`.verify`) and the AST repo lint (:mod:`.lint`).
+
+Submodule attributes resolve lazily (PEP 562): ``python -m
+repro.analysis.verify`` then runs the CLI without the package import
+having pre-loaded the module, and importing :mod:`repro.analysis` stays
+cheap for consumers that only need one analyzer.
+"""
+_EXPORTS = {
+    "HloStats": "hlo", "analyze_hlo": "hlo", "lint_hlo": "hlo",
+    "HloContract": "hlo", "CollectiveSite": "hlo",
+    "collective_sites": "hlo",
+    "RooflineTerms": "roofline", "roofline": "roofline",
+    "SpecVerificationError": "verify", "VerifyReport": "verify",
+    "Violation": "verify", "assert_valid": "verify",
+    "engine_of": "verify", "hlo_contract_for": "verify",
+    "verify_spec": "verify",
+    "lint_paths": "lint", "lint_source": "lint",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+        mod = importlib.import_module(f".{_EXPORTS[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -229,6 +229,106 @@ def _trip_count(cond_lines: list) -> int:
     return max(consts.values(), default=1)
 
 
+# ---------------------------------------------------------------------------
+# HLO contract linter (flat site counting)
+# ---------------------------------------------------------------------------
+#
+# The loop-aware analyzer above multiplies collective counts by while-loop
+# trip counts -- the right thing for cost accounting.  The contract linter
+# deliberately counts FLAT sites instead: the executors' scan compile
+# promises the HLO holds each wave's collective exactly ONCE regardless of
+# the segment count, so a flat site count equal to the wave count IS the
+# "program size flat in S" contract the JAX tests used to hand-roll.
+
+_SITE_RE = re.compile(
+    r"=\s+(\S+)\s+(" + "|".join(re.escape(c) for c in COLLECTIVES)
+    + r")(?:-start)?\(")
+
+
+@dataclass(frozen=True)
+class CollectiveSite:
+    """One collective op site in the HLO text (counted flat, not
+    trip-count-multiplied).  ``dtype``/``elems`` come from the site's
+    first output shape (the wire payload; ``-start`` tuple outputs report
+    their first element)."""
+    kind: str
+    dtype: str
+    elems: int
+
+
+@dataclass(frozen=True)
+class HloContract:
+    """What a correct executor compile must look like, enforced by
+    :func:`lint_hlo`.  ``None`` fields are unconstrained.
+
+    ``ppermutes``           exact flat ``collective-permute`` site count
+                            (== the spec's wave count: one collective per
+                            wave, flat in the segment count);
+    ``max_f32_sites``       most f32-wire ppermute sites allowed (the
+                            quantized broadcast waves: reduce wires must
+                            be int8);
+    ``max_f32_wire_elems``  largest f32 wire element count allowed (the
+                            bit-packed lane width: a full f32 row means
+                            the codec was silently dropped).
+    """
+    ppermutes: int | None = None
+    max_f32_sites: int | None = None
+    max_f32_wire_elems: int | None = None
+
+
+def collective_sites(text: str) -> list:
+    """Every collective op site in the HLO text, flat (each site once,
+    independent of any enclosing while-loop's trip count)."""
+    sites = []
+    for line in text.splitlines():
+        m = _SITE_RE.search(line)
+        if not m:
+            continue
+        # the output shape token sits between '=' and the op name; -start
+        # sites wrap it in a tuple "(s8[18]{0}, ...)" -- the first shape
+        # is the wire payload either way
+        sm = _SHAPE_RE.search(m.group(1))
+        dtype, elems = "", 0
+        if sm:
+            dtype = sm.group(1)
+            elems = 1
+            for d in sm.group(2).split(","):
+                if d:
+                    elems *= int(d)
+        sites.append(CollectiveSite(m.group(2), dtype, elems))
+    return sites
+
+
+def lint_hlo(text: str, contract: HloContract) -> list:
+    """Check compiled HLO text against an :class:`HloContract`; returns a
+    list of human-readable violation strings (empty = clean).  Use
+    :func:`repro.analysis.verify.hlo_contract_for` to derive the contract
+    from a compiled spec."""
+    sites = collective_sites(text)
+    perms = [s for s in sites if s.kind == "collective-permute"]
+    out = []
+    if contract.ppermutes is not None and len(perms) != contract.ppermutes:
+        out.append(
+            f"collective-permute site count {len(perms)} != contracted "
+            f"{contract.ppermutes} (one collective per wave, flat in the "
+            "segment count)")
+    f32 = [s for s in perms if s.dtype == "f32"]
+    if contract.max_f32_sites is not None \
+            and len(f32) > contract.max_f32_sites:
+        out.append(
+            f"{len(f32)} f32-wire collective-permute sites, contract "
+            f"allows {contract.max_f32_sites} (reduce wires must be "
+            "quantized)")
+    if contract.max_f32_wire_elems is not None:
+        for s in f32:
+            if s.elems > contract.max_f32_wire_elems:
+                out.append(
+                    f"f32 wire of {s.elems} elements exceeds the packed-"
+                    f"lane cap {contract.max_f32_wire_elems} (an "
+                    "unquantized full row leaked onto the wire)")
+    return out
+
+
 @dataclass
 class HloStats:
     dot_flops: float

@@ -1,0 +1,204 @@
+"""AST-based repo lint for the invariants the verifier cannot see.
+
+The static wave-program verifier (:mod:`repro.analysis.verify`) proves a
+*compiled spec* legal; this module lints the *source* for the hygiene
+rules that keep specs cheap and jit caches stable:
+
+``spec-construct``
+    The compiled spec classes (``FusedAllreduceSpec``,
+    ``PipelinedAllreduceSpec``, ``StripedCollectiveSpec``,
+    ``TreeAllreduceSpec``) may only be constructed inside their defining
+    compiler modules.  Everyone else must go through the cached
+    ``*_spec_from_schedule`` constructors -- a hand-rolled spec bypasses
+    both the compile-time verifier and the identity cache that keeps
+    jitted executors from retracing.
+
+``axis-literal``
+    Inside ``repro/dist``, ``jax.lax`` collectives (``ppermute`` /
+    ``psum`` / ``pmean`` / ``axis_index`` / ...) must not receive a
+    string-literal axis name: the axis names live on the spec
+    (``spec.axes``), so executors stay correct under any mesh naming.
+
+``traced-table-build``
+    Inside ``repro/dist``, a function nested in another function (the
+    shape every traced closure takes here) must not build a table from a
+    Python list/comprehension literal via ``jnp.asarray`` / ``np.array``
+    & co. -- per-call table construction inside traced bodies is exactly
+    the trace-time cost the spec compilers exist to hoist.
+
+``nested-numpy``
+    Inside ``repro/dist``, nested (traced-closure) functions must not
+    call ``np.*`` at all: NumPy inside a traced body bakes silently into
+    constants at trace time.  Module-level helpers preparing static
+    tables from the spec are fine (and idiomatic).
+
+Run as ``python -m repro.analysis.lint src`` (the CI verify job does);
+exits non-zero on any finding.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+
+SPEC_CLASSES = ("FusedAllreduceSpec", "PipelinedAllreduceSpec",
+                "StripedCollectiveSpec", "TreeAllreduceSpec")
+# module suffix -> spec classes it is allowed to construct (its compilers)
+SPEC_HOME = {
+    "core/collectives.py": {"FusedAllreduceSpec", "PipelinedAllreduceSpec",
+                            "StripedCollectiveSpec"},
+    "dist/tree_allreduce.py": {"TreeAllreduceSpec"},
+}
+AXIS_FNS = {"ppermute": 1, "psum": 1, "pmean": 1, "pmax": 1, "pmin": 1,
+            "axis_index": 0, "all_gather": 1, "psum_scatter": 1}
+TABLE_FNS = ("asarray", "array", "stack", "concatenate")
+LITERALS = (ast.List, ast.Tuple, ast.ListComp, ast.GeneratorExp)
+RULES = ("spec-construct", "axis-literal", "traced-table-build",
+         "nested-numpy")
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _call_name(node: ast.Call) -> str:
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
+def _call_root(node: ast.Call) -> str:
+    f = node.func
+    while isinstance(f, ast.Attribute):
+        f = f.value
+    return f.id if isinstance(f, ast.Name) else ""
+
+
+def _is_str_literal(node) -> bool:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return True
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return bool(node.elts) and all(_is_str_literal(e)
+                                       for e in node.elts)
+    return False
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str, in_dist: bool):
+        self.path = path
+        self.in_dist = in_dist
+        self.depth = 0                   # enclosing function nesting
+        self.findings: list = []
+        suffix = next((s for s in SPEC_HOME if path.endswith(s)), None)
+        self.allowed_specs = SPEC_HOME.get(suffix, set())
+
+    def _emit(self, rule, node, msg):
+        self.findings.append(Finding(rule, self.path, node.lineno, msg))
+
+    def visit_FunctionDef(self, node):
+        self.depth += 1
+        self.generic_visit(node)
+        self.depth -= 1
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node):
+        self.depth += 1
+        self.generic_visit(node)
+        self.depth -= 1
+
+    def visit_Call(self, node):
+        name = _call_name(node)
+        root = _call_root(node)
+        if name in SPEC_CLASSES and name not in self.allowed_specs:
+            self._emit("spec-construct", node,
+                       f"{name} constructed directly; obtain specs via the "
+                       "cached *_spec_from_schedule compilers (they verify "
+                       "and keep jit caches stable)")
+        if self.in_dist and name in AXIS_FNS:
+            pos = AXIS_FNS[name]
+            cands = []
+            if len(node.args) > pos:
+                cands.append(node.args[pos])
+            cands.extend(kw.value for kw in node.keywords
+                         if kw.arg in ("axis_name", "axis"))
+            if any(_is_str_literal(c) for c in cands):
+                self._emit("axis-literal", node,
+                           f"jax.lax.{name} called with a string-literal "
+                           "axis name; use the spec's axes "
+                           "(spec.axes / _axis_arg)")
+        if self.in_dist and self.depth >= 2:   # inside a nested function
+            if name in TABLE_FNS and root in ("jnp", "np", "numpy", "jax") \
+                    and node.args \
+                    and isinstance(node.args[0], LITERALS):
+                self._emit("traced-table-build", node,
+                           f"{root}.{name} of a Python literal inside a "
+                           "nested (traced) function; hoist the table to "
+                           "spec-compile time")
+            if root in ("np", "numpy"):
+                self._emit("nested-numpy", node,
+                           f"numpy call {root}.{name} inside a nested "
+                           "(traced) function body; NumPy bakes into "
+                           "trace-time constants -- compute it at "
+                           "spec-compile time instead")
+        self.generic_visit(node)
+
+
+def lint_source(text: str, path: str = "<string>") -> list:
+    """Lint one module's source; returns a list of :class:`Finding`."""
+    norm = path.replace("\\", "/")
+    in_dist = "/dist/" in norm or norm.startswith("dist/")
+    tree = ast.parse(text, filename=path)
+    linter = _Linter(norm, in_dist)
+    linter.visit(tree)
+    return linter.findings
+
+
+def lint_paths(paths) -> list:
+    """Lint every ``.py`` file under the given files/directories."""
+    findings: list = []
+    for p in paths:
+        p = Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            findings.extend(lint_source(f.read_text(), str(f)))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="AST repo lint: spec-construction, axis-name and "
+                    "traced-body hygiene (see module docstring).")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        for r in RULES:
+            print(r)
+        return 0
+    findings = lint_paths(args.paths)
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"\n{len(findings)} lint finding(s)")
+        return 1
+    print("repo lint clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import functools
 import logging
+import os
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -162,6 +163,51 @@ def allreduce_schedule(n: int, trees, roots=None) -> AllreduceSchedule:
 
 
 # ---------------------------------------------------------------------------
+# compile-time static verification (repro.analysis.verify)
+# ---------------------------------------------------------------------------
+#
+# Every spec compiler takes a ``verify=`` flag and hands the freshly
+# built program to the static verifier BEFORE caching it, so an illegal
+# schedule (e.g. a future schedule-search candidate with two trees on one
+# link) is rejected at build time, not discovered as wrong numerics at
+# step time.  ``verify=None`` resolves through the module global below /
+# the ``REPRO_VERIFY_SPECS`` environment variable ("off" | "cheap" |
+# "full"); production defaults to the O(messages) cheap assert mode,
+# tests export REPRO_VERIFY_SPECS=full (see tests/conftest.py).
+
+VERIFY_SPECS: str | None = None     # programmatic override of the env var
+
+
+def _resolve_verify(verify) -> str:
+    if verify is None:
+        mode = VERIFY_SPECS or os.environ.get("REPRO_VERIFY_SPECS", "cheap")
+    elif verify is True:
+        mode = "full"
+    elif verify is False:
+        mode = "off"
+    else:
+        mode = verify
+    if mode not in ("off", "cheap", "full"):
+        raise ValueError(
+            f"verify must be one of off/cheap/full (or bool/None), "
+            f"got {mode!r}")
+    return mode
+
+
+def verify_compiled_spec(spec, verify=None, context: str = ""):
+    """Run the static verifier (:mod:`repro.analysis.verify`) on a
+    compiled spec at the resolved level; raises
+    :class:`repro.analysis.verify.SpecVerificationError` on violations.
+    Imported lazily: the verifier itself imports this module."""
+    mode = _resolve_verify(verify)
+    if mode == "off":
+        return spec
+    from ..analysis.verify import assert_valid
+    assert_valid(spec, level=mode, context=context)
+    return spec
+
+
+# ---------------------------------------------------------------------------
 # fused global-round program (the executor-facing compiled form)
 # ---------------------------------------------------------------------------
 #
@@ -261,15 +307,21 @@ _FUSED_CACHE: dict = {}
 
 
 def fused_spec_from_schedule(sched: AllreduceSchedule,
-                             axis_names) -> FusedAllreduceSpec:
+                             axis_names,
+                             verify=None) -> FusedAllreduceSpec:
     """Compile an :class:`AllreduceSchedule` into the round-major
     :class:`FusedAllreduceSpec`.  Compiles are cached by (fabric, rooted
     trees, axes): repeated calls for the same topology return the *same*
-    object, keeping jit caches stable."""
+    object, keeping jit caches stable.  Fresh compiles are statically
+    verified per ``verify=`` (see :func:`verify_compiled_spec`) before
+    entering the cache; cache hits re-verify only on an explicit truthy
+    ``verify``."""
     axes = tuple(axis_names)
     key = _sched_key(sched, axes)
     hit = _FUSED_CACHE.get(key)
     if hit is not None:
+        if verify:
+            verify_compiled_spec(hit, verify, "fused_spec_from_schedule")
         return hit
     phases = {}
     for phase in ("reduce", "bcast"):
@@ -282,6 +334,7 @@ def fused_spec_from_schedule(sched: AllreduceSchedule,
                               depth=sched.depth,
                               reduce_rounds=phases["reduce"],
                               bcast_rounds=phases["bcast"], key=key)
+    verify_compiled_spec(spec, verify, "fused_spec_from_schedule")
     _FUSED_CACHE[key] = spec
     return spec
 
@@ -447,7 +500,7 @@ def _message_dag(sched: AllreduceSchedule):
     return msgs, deps
 
 
-def _list_schedule(msgs, deps, kinds=None, op_of=None):
+def _list_schedule(msgs, deps, kinds=None, op_of=None, verify=False):
     """Greedy list scheduling of the message DAG into ppermute-legal
     waves (unique sources AND destinations per wave), critical-path
     height first.  A message becomes ready only once every dependency is
@@ -458,7 +511,12 @@ def _list_schedule(msgs, deps, kinds=None, op_of=None):
     separately).  ``op_of`` (message -> op class) keeps each wave
     homogeneous in arrival semantics: the striped program mixes
     accumulate (reduce-scatter) and overwrite (allgather) messages in
-    one DAG, but an executor wave must apply a single op."""
+    one DAG, but an executor wave must apply a single op.  ``verify``
+    re-checks the emitted waves against the scheduling contract (every
+    selected message exactly once, per-wave ppermute legality, every
+    dependency in a strictly earlier wave) -- the compilers enable it
+    under full-level spec verification so schedule-search candidates
+    cannot smuggle an illegal wave past the greedy selector."""
     ids = [i for i in range(len(msgs)) if kinds is None or msgs[i][1] in kinds]
     chosen = set(ids)
     dependents: dict = {i: [] for i in ids}
@@ -490,7 +548,32 @@ def _list_schedule(msgs, deps, kinds=None, op_of=None):
         waves.append(take)
         pending -= set(take)
         done |= set(take)
+    if verify:
+        _check_list_schedule(msgs, deps, ids, waves, op_of)
     return waves
+
+
+def _check_list_schedule(msgs, deps, ids, waves, op_of=None) -> None:
+    """Self-check of a list-scheduled wave program (see
+    :func:`_list_schedule`); raises ``ValueError`` on any breach."""
+    scheduled = [i for take in waves for i in take]
+    if sorted(scheduled) != sorted(ids):
+        raise ValueError("list schedule drops or duplicates messages")
+    wave_of = {i: w for w, take in enumerate(waves) for i in take}
+    chosen = set(ids)
+    for w, take in enumerate(waves):
+        srcs = [msgs[i][2] for i in take]
+        dsts = [msgs[i][3] for i in take]
+        if len(set(srcs)) != len(srcs) or len(set(dsts)) != len(dsts):
+            raise ValueError(f"list schedule wave {w} is not ppermute-legal")
+        if op_of is not None and len({op_of(msgs[i]) for i in take}) > 1:
+            raise ValueError(f"list schedule wave {w} mixes arrival ops")
+        for i in take:
+            late = [d for d in deps[i] if d in chosen and wave_of[d] >= w]
+            if late:
+                raise ValueError(
+                    f"list schedule wave {w}: message {msgs[i]} precedes "
+                    f"its dependency {msgs[late[0]]}")
 
 
 def _pipe_wave(n: int, k: int, msgs, take) -> PipeWave:
@@ -513,27 +596,36 @@ _PIPE_CACHE: dict = {}
 
 
 def pipelined_spec_from_schedule(sched: AllreduceSchedule,
-                                 axis_names) -> PipelinedAllreduceSpec:
+                                 axis_names,
+                                 verify=None) -> PipelinedAllreduceSpec:
     """Compile an :class:`AllreduceSchedule` into the list-scheduled
     :class:`PipelinedAllreduceSpec`.  Cached by (fabric, rooted trees,
     axes) like :func:`fused_spec_from_schedule`: recompiles return the
-    identical object, keeping jit caches stable."""
+    identical object, keeping jit caches stable.  Fresh compiles are
+    statically verified per ``verify=`` before caching (full level also
+    self-checks the list scheduler's waves)."""
     axes = tuple(axis_names)
     key = (*_sched_key(sched, axes), "pipelined")
     hit = _PIPE_CACHE.get(key)
     if hit is not None:
+        if verify:
+            verify_compiled_spec(hit, verify, "pipelined_spec_from_schedule")
         return hit
+    deep = _resolve_verify(verify) == "full"
     msgs, deps = _message_dag(sched)
     n, k = sched.n, sched.k
     waves = tuple(_pipe_wave(n, k, msgs, take)
-                  for take in _list_schedule(msgs, deps))
+                  for take in _list_schedule(msgs, deps, verify=deep))
     red = [_pipe_wave(n, k, msgs, take)
-           for take in _list_schedule(msgs, deps, kinds={REDUCE})]
+           for take in _list_schedule(msgs, deps, kinds={REDUCE},
+                                      verify=deep)]
     bc = [_pipe_wave(n, k, msgs, take)
-          for take in _list_schedule(msgs, deps, kinds={BCAST})]
+          for take in _list_schedule(msgs, deps, kinds={BCAST},
+                                     verify=deep)]
     spec = PipelinedAllreduceSpec(n=n, k=k, axes=axes, depth=sched.depth,
                                   waves=waves, q8_waves=tuple(red + bc),
                                   q8_boundary=len(red), key=key)
+    verify_compiled_spec(spec, verify, "pipelined_spec_from_schedule")
     _PIPE_CACHE[key] = spec
     return spec
 
@@ -852,16 +944,22 @@ _STRIPED_CACHE: dict = {}
 
 
 def striped_spec_from_schedule(sched: AllreduceSchedule,
-                               axis_names) -> StripedCollectiveSpec:
+                               axis_names,
+                               verify=None) -> StripedCollectiveSpec:
     """Compile an :class:`AllreduceSchedule` into the striped
     reduce-scatter / allgather :class:`StripedCollectiveSpec`.  Cached by
     (fabric, rooted trees, axes) like the other spec compilers:
-    recompiles return the identical object, keeping jit caches stable."""
+    recompiles return the identical object, keeping jit caches stable.
+    Fresh compiles are statically verified per ``verify=`` before
+    caching (full level also self-checks the list scheduler's waves)."""
     axes = tuple(axis_names)
     key = (*_sched_key(sched, axes), "striped")
     hit = _STRIPED_CACHE.get(key)
     if hit is not None:
+        if verify:
+            verify_compiled_spec(hit, verify, "striped_spec_from_schedule")
         return hit
+    deep = _resolve_verify(verify) == "full"
     trees = tuple(_striped_tree(sched.n, ts) for ts in sched.trees)
     msgs, deps = _striped_dag(sched, trees)
     n = sched.n
@@ -869,12 +967,14 @@ def striped_spec_from_schedule(sched: AllreduceSchedule,
     def waves_of(kinds=None):
         return tuple(_striped_wave(n, msgs, take, trees)
                      for take in _list_schedule(msgs, deps, kinds=kinds,
-                                                op_of=_striped_op))
+                                                op_of=_striped_op,
+                                                verify=deep))
 
     spec = StripedCollectiveSpec(
         n=n, k=sched.k, axes=axes, depth=sched.depth, trees=trees,
         waves=waves_of(), rs_waves=waves_of(_RS_KINDS),
         ag_waves=waves_of(frozenset({AG_UP, AG_DOWN})), key=key)
+    verify_compiled_spec(spec, verify, "striped_spec_from_schedule")
     _STRIPED_CACHE[key] = spec
     return spec
 
@@ -1194,26 +1294,36 @@ class CostModel:
         return cls._BUILTIN.get(backend)
 
     @classmethod
+    def _warn_no_calibration(cls, backend) -> None:
+        """Log the unknown-backend fallback at most ONCE per backend
+        name.  ``for_backend`` sits inside the segment-autotune and
+        codec-policy loops, which probe it once per (payload, S)
+        candidate -- an unguarded warning there floods the log with one
+        line per candidate."""
+        if backend in cls._WARNED_BACKENDS:
+            return
+        cls._WARNED_BACKENDS.add(backend)
+        logger.warning(
+            "CostModel has no calibration for backend %r; falling "
+            "back to the default fabric constants (segments='auto' "
+            "and codec='auto' may mispick).  Run "
+            "benchmarks/allreduce_bench.py on this backend to "
+            "measure and persist one into BENCH_allreduce.json.",
+            backend)
+
+    @classmethod
     def for_backend(cls, backend: str | None) -> "CostModel":
         """Constants calibrated for where the program actually runs:
         measured (``register_calibration``) first, then the built-in
         per-backend table.  A backend with NO calibration falls back to
         the default fabric constants *explicitly*: the fallback is
-        logged (once per backend) because the segment autotuner and the
-        codec policy both read these constants, and silently modelling
-        an unknown backend as a TPU-like fabric is exactly how
-        ``segments="auto"`` mispicks."""
+        logged (once per backend, via ``_warn_no_calibration``) because
+        the segment autotuner and the codec policy both read these
+        constants, and silently modelling an unknown backend as a
+        TPU-like fabric is exactly how ``segments="auto"`` mispicks."""
         consts = cls.calibration_for(backend)
         if consts is None:
-            if backend not in cls._WARNED_BACKENDS:
-                cls._WARNED_BACKENDS.add(backend)
-                logger.warning(
-                    "CostModel has no calibration for backend %r; falling "
-                    "back to the default fabric constants (segments='auto' "
-                    "and codec='auto' may mispick).  Run "
-                    "benchmarks/allreduce_bench.py on this backend to "
-                    "measure and persist one into BENCH_allreduce.json.",
-                    backend)
+            cls._warn_no_calibration(backend)
             consts = {}
         return cls(**consts)
 

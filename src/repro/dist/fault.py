@@ -268,11 +268,18 @@ class FaultAwareAllreduce:
         return nbytes / cm.edst_tree_allreduce(nbytes, e.sched)
 
     def verify_entry(self, entry_id: int, d: int | None = None,
-                     seed: int = 0) -> bool:
-        """Packet-level correctness of one program (numpy simulator)."""
+                     seed: int = 0, static: bool = False) -> bool:
+        """Correctness of one precompiled program.  ``static=True`` runs
+        the O(messages) static verifier (:mod:`repro.analysis.verify`)
+        on the entry's compiled spec -- no simulation, the mode fleet
+        controllers should use on large fabrics; the default replays the
+        schedule through the NumPy packet simulator."""
         e = self.entries[entry_id]
         if e.sched is None:
             return False
+        if static:
+            from ..analysis.verify import verify_spec
+            return verify_spec(e.spec, level="full").ok
         d = d or 8 * e.k
         vals = np.random.RandomState(seed).randn(self.graph.n, d)
         return simulate_allreduce(e.sched, vals).ok

@@ -29,6 +29,14 @@ With ``quantize=True`` reduce-scatter hops obey the ``codec`` policy
 collective per hop) and allgather hops always take the int8 wire when
 the codec is enabled -- each hop re-codes, since unlike the broadcast
 phase of the chunk engines the gathered windows differ hop to hop.
+
+Everything this executor relies on -- op-homogeneous ppermute-legal
+waves, window/tree agreement between sender and receiver, circular
+complement of below/above windows, child-window nesting, RS-then-AG
+happens-before -- is provable from the spec's tables alone and IS
+proved, statically, by :mod:`repro.analysis.verify` (see the "Static
+invariants" section of ``src/repro/dist/README.md``); spec compilation
+already ran the cheap tier via ``verify_compiled_spec``.
 """
 from __future__ import annotations
 

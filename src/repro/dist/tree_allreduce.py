@@ -55,7 +55,8 @@ import numpy as np
 
 from ..core.collectives import (CostModel, FusedAllreduceSpec,
                                 PipelinedAllreduceSpec,
-                                StripedCollectiveSpec, chunk_sizes)
+                                StripedCollectiveSpec, chunk_sizes,
+                                verify_compiled_spec)
 from ..kernels.tree_combine.ops import (combine, q8_combine, q8_pack,
                                         q8_pack_rows, q8_unpack,
                                         q8_unpack_rows)
@@ -128,10 +129,13 @@ def _dst_tables(rounds, n: int):
     return tuple(out)
 
 
-def spec_from_schedule(sched, axis_names) -> TreeAllreduceSpec:
+def spec_from_schedule(sched, axis_names, verify=None) -> TreeAllreduceSpec:
     """Compile an :class:`repro.core.collectives.AllreduceSchedule` into a
     static per-tree spec bound to the given mesh axis names.  (The fused
-    and pipelined forms come from ``repro.core.collectives``.)"""
+    and pipelined forms come from ``repro.core.collectives``.)  Like
+    those compilers, the fresh spec is statically verified per
+    ``verify=`` (``repro.analysis.verify``; level resolved from
+    ``REPRO_VERIFY_SPECS``) before being returned."""
     trees = []
     for ts in sched.trees:
         bcast = _compile_rounds(ts.bcast_rounds)
@@ -139,8 +143,9 @@ def spec_from_schedule(sched, axis_names) -> TreeAllreduceSpec:
                                  reduce_rounds=_compile_rounds(ts.reduce_rounds),
                                  bcast_rounds=bcast,
                                  bcast_dst=_dst_tables(bcast, sched.n)))
-    return TreeAllreduceSpec(n=sched.n, axes=tuple(axis_names),
+    spec = TreeAllreduceSpec(n=sched.n, axes=tuple(axis_names),
                              trees=tuple(trees))
+    return verify_compiled_spec(spec, verify, "spec_from_schedule")
 
 
 # chunk apportioning: the canonical largest-remainder helper lives in

@@ -10,6 +10,13 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
+# Every spec compiled under the test suite runs the FULL static verifier
+# (tree recovery, happens-before, edge-disjointness, stripe windows) --
+# not just the cheap wave scans of the production default.  setdefault so
+# a developer can still override, and subprocess tests inherit it through
+# run_with_devices' environment copy.
+os.environ.setdefault("REPRO_VERIFY_SPECS", "full")
+
 # Offline fallback: this container cannot install hypothesis, so register a
 # seeded deterministic shim in its place (property-test bodies unchanged).
 # The real package wins whenever it is importable.

@@ -85,10 +85,11 @@ print("PIPELINED_ALLREDUCE_OK")
 """
 
 HLO_CODE = r"""
-import re
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 import repro.dist
+from repro.analysis.hlo import lint_hlo
+from repro.analysis.verify import hlo_contract_for
 from repro.core import topologies as topo
 from repro.core.edst_star import star_edsts
 from repro.core.collectives import (allreduce_schedule,
@@ -105,10 +106,8 @@ def smapped(body):
                          out_specs=P(('a', 'b')))
 
 
-def hlo_collectives(f, *args):
-    text = jax.jit(f).lower(*args).compile().as_text()
-    return sum(1 for l in text.splitlines()
-               if re.search(r"=\s+\S+\s+collective-permute(-start)?\(", l))
+def hlo_text(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
 
 
 for dims in [(4, 4), (2, 8)]:
@@ -120,22 +119,29 @@ for dims in [(4, 4), (2, 8)]:
     for S in (1, 2, 8):
         assert spec.steps(S) == len(spec.waves) + S - 1
 
-    # S=1 unrolls: exactly one collective per wave.  S>1 scans: the HLO
-    # still holds each wave's collective exactly ONCE -- program size is
-    # flat in the segment count (the whole point of the scan compile).
-    n1 = hlo_collectives(smapped(
-        lambda v: pipelined_tree_allreduce(v, spec, segments=1)), x)
-    assert n1 == len(spec.waves), (dims, n1, len(spec.waves))
-    for S in (2, 8):
-        nS = hlo_collectives(smapped(
+    # S=1 unrolls, S>1 scans: either way the HLO holds each wave's
+    # collective exactly ONCE -- program size flat in the segment count
+    # (the whole point of the scan compile).  The contract is derived
+    # from the spec itself (hlo_contract_for) and enforced by lint_hlo.
+    contract = hlo_contract_for(spec)
+    assert contract.ppermutes == len(spec.waves)
+    for S in (1, 2, 8):
+        text = hlo_text(smapped(
             lambda v, S=S: pipelined_tree_allreduce(v, spec, segments=S)), x)
-        assert nS == len(spec.waves), (dims, S, nS)
+        bad = lint_hlo(text, contract)
+        assert not bad, (dims, S, bad)
 
-    # quantized S=1: one collective per q8 wave (scale rides the payload)
-    nq = hlo_collectives(smapped(
+    # quantized S=1: one collective per q8 wave, int8 reduce wires -- f32
+    # sites only on the packed broadcast waves, and every f32 wire is the
+    # packed lane width, never a full mrow-element row (a full row means
+    # the codec was silently dropped)
+    qcontract = hlo_contract_for(spec, quantize=True, m=53)
+    assert qcontract.ppermutes == len(spec.q8_waves)
+    text = hlo_text(smapped(
         lambda v: pipelined_tree_allreduce(v, spec, quantize=True,
                                            segments=1, codec="full")), x)
-    assert nq == len(spec.q8_waves), (dims, nq, len(spec.q8_waves))
+    bad = lint_hlo(text, qcontract)
+    assert not bad, (dims, bad)
 
 print("PIPELINED_HLO_OK")
 """

@@ -1,0 +1,335 @@
+"""Static wave-program verifier: mutation tests, build-time rejection,
+HLO contract linter, and the AST repo lint.
+
+The interesting property of a verifier is not that correct specs pass
+(the CLI gate covers that on all five paper topologies) but that each
+*class* of corruption is caught with its own named diagnostic.  Every
+mutation below deep-copies a cached spec (the compilers return identical
+objects on purpose -- never mutate a cache hit) or rebuilds it with
+``dataclasses.replace``, breaks exactly one invariant, and asserts the
+verifier reports the matching violation code.
+"""
+import copy
+import dataclasses
+import os
+from functools import lru_cache
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis.hlo import HloContract, collective_sites, lint_hlo
+from repro.analysis.lint import lint_paths, lint_source
+from repro.analysis.verify import (SpecVerificationError, assert_valid,
+                                   engine_of, hlo_contract_for, verify_spec)
+from repro.analysis.verify import _schedule_for
+from repro.core.collectives import (BCAST, REDUCE, AllreduceSchedule,
+                                    fused_spec_from_schedule,
+                                    pipelined_spec_from_schedule,
+                                    striped_spec_from_schedule)
+
+TOPOS = ("torus4x4", "hyperx4x4", "slimfly_q5")
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "src")
+
+
+@lru_cache(maxsize=None)
+def sched_for(label):
+    return _schedule_for(label)
+
+
+def codes_of(spec):
+    return {v.code for v in verify_spec(spec, level="full").violations}
+
+
+# ---------------------------------------------------------------------------
+# clean specs verify on every engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("label", TOPOS)
+def test_clean_specs_verify(label):
+    sched = sched_for(label)
+    for compile_ in (fused_spec_from_schedule, pipelined_spec_from_schedule,
+                     striped_spec_from_schedule):
+        spec = compile_(sched, ("data",))
+        report = verify_spec(spec, level="full")
+        assert report.ok, report.summary()
+        assert report.messages > 0 and report.waves > 0
+        assert_valid(spec)           # and the raising form doesn't raise
+
+
+def test_engine_of():
+    sched = sched_for("torus4x4")
+    assert engine_of(fused_spec_from_schedule(sched, ("data",))) == "fused"
+    assert engine_of(
+        pipelined_spec_from_schedule(sched, ("data",))) == "pipelined"
+    assert engine_of(
+        striped_spec_from_schedule(sched, ("data",))) == "striped"
+
+
+# ---------------------------------------------------------------------------
+# mutations: one corruption class -> one named diagnostic
+# ---------------------------------------------------------------------------
+
+def mutate_drop_recv(label):
+    """A receive flag silently cleared: the arrival has nowhere to land."""
+    spec = copy.deepcopy(pipelined_spec_from_schedule(sched_for(label),
+                                                      ("data",)))
+    _, d = spec.waves[0].perm[0]
+    spec.waves[0].reduce_flag[:, d] = False
+    spec.waves[0].bcast_flag[:, d] = False
+    return spec, "recv-dropped"
+
+
+def mutate_swap_sends(label):
+    """Two senders' chunk rows swapped: arrivals land in the wrong tree."""
+    spec = copy.deepcopy(pipelined_spec_from_schedule(sched_for(label),
+                                                      ("data",)))
+    for wv in spec.waves:
+        if len(wv.rows) >= 2:
+            senders = [s for s, _ in wv.perm]
+            by_row = {int(wv.send_row[s]): s for s in senders}
+            rows = sorted(by_row)[:2]
+            s1, s2 = by_row[rows[0]], by_row[rows[1]]
+            wv.send_row[s1], wv.send_row[s2] = rows[1], rows[0]
+            return spec, "row-misroute"
+    raise AssertionError(f"{label}: no wave ships two distinct rows")
+
+
+def mutate_double_book_link(label):
+    """A whole wave replayed later: every one of its directed links is
+    double-booked, which would corrupt segment streaming at any S > 1."""
+    spec = pipelined_spec_from_schedule(sched_for(label), ("data",))
+    return (dataclasses.replace(spec, waves=spec.waves + (spec.waves[0],)),
+            "link-race")
+
+
+def mutate_cross_wire_trees(label):
+    """Two trees routed over the same physical links: the EDST property
+    itself violated.  Built via raw AllreduceSchedule -- the public
+    allreduce_schedule() already refuses this, so go around it."""
+    sched = sched_for(label)
+    bad = AllreduceSchedule(sched.n, [sched.trees[0], sched.trees[0]])
+    spec = pipelined_spec_from_schedule(bad, ("cross", "wire"), verify=False)
+    return spec, "edge-disjointness"
+
+
+def mutate_reorder_waves(label):
+    """The wave order reversed: every dependency of the message DAG now
+    runs backwards."""
+    spec = pipelined_spec_from_schedule(sched_for(label), ("data",))
+    return (dataclasses.replace(spec, waves=tuple(reversed(spec.waves))),
+            "happens-before")
+
+
+def mutate_fused_drop_recv(label):
+    spec = copy.deepcopy(fused_spec_from_schedule(sched_for(label),
+                                                  ("data",)))
+    _, d = spec.reduce_rounds[0].perm[0]
+    spec.reduce_rounds[0].recv_flag[d] = False
+    return spec, "recv-dropped"
+
+
+def mutate_stripe_window(label):
+    """A stripe window widened by one slot on both endpoints: the tables
+    still agree with each other, but some owner slot now crosses the
+    edge twice (conservation broken)."""
+    spec = copy.deepcopy(striped_spec_from_schedule(sched_for(label),
+                                                    ("data",)))
+    wv = spec.waves[0]
+    s, d = wv.perm[0]
+    wv.send_nslot[s] += 1
+    wv.recv_nslot[d] += 1
+    return spec, "stripe-conservation"
+
+
+def mutate_striped_op(label):
+    """A reduce-scatter wave's op flipped to overwrite: partial sums
+    would be clobbered instead of accumulated."""
+    spec = striped_spec_from_schedule(sched_for(label), ("data",))
+    flipped = dataclasses.replace(
+        spec.waves[0], op=BCAST if spec.waves[0].op == REDUCE else REDUCE)
+    return (dataclasses.replace(spec,
+                                waves=(flipped,) + spec.waves[1:]),
+            "op-mixed")
+
+
+MUTATIONS = {
+    "drop-recv-flag": mutate_drop_recv,
+    "swap-two-sends": mutate_swap_sends,
+    "double-book-link": mutate_double_book_link,
+    "cross-wire-trees": mutate_cross_wire_trees,
+    "reorder-waves": mutate_reorder_waves,
+    "fused-drop-recv": mutate_fused_drop_recv,
+    "stripe-window": mutate_stripe_window,
+    "striped-op-flip": mutate_striped_op,
+}
+
+
+@pytest.mark.parametrize("name", sorted(MUTATIONS))
+def test_mutation_detected(name):
+    spec, expected = MUTATIONS[name]("torus4x4")
+    codes = codes_of(spec)
+    assert expected in codes, (
+        f"mutation {name} expected [{expected}], verifier said {codes}")
+
+
+def test_mutations_have_distinct_diagnostics():
+    """Each corruption class maps to its own code -- a verifier that says
+    'something is wrong' for everything is not actionable."""
+    expected = {MUTATIONS[n]("torus4x4")[1] for n in MUTATIONS}
+    assert len(expected) >= 6
+
+
+def test_violation_detail_names_the_site():
+    spec, _ = mutate_drop_recv("torus4x4")
+    report = verify_spec(spec, level="full")
+    _, d = spec.waves[0].perm[0]
+    assert any(f"vertex {d}" in v.detail for v in report.violations
+               if v.code == "recv-dropped")
+    assert "[recv-dropped]" in report.summary()
+
+
+@settings(max_examples=12, deadline=None)
+@given(label=st.sampled_from(TOPOS), name=st.sampled_from(sorted(MUTATIONS)))
+def test_mutation_detected_across_topologies(label, name):
+    spec, expected = MUTATIONS[name](label)
+    assert expected in codes_of(spec)
+
+
+# ---------------------------------------------------------------------------
+# build-time rejection (the verify= flag on the spec compilers)
+# ---------------------------------------------------------------------------
+
+def test_compile_rejects_illegal_schedule():
+    sched = sched_for("torus4x4")
+    bad = AllreduceSchedule(sched.n, [sched.trees[0], sched.trees[0]])
+    with pytest.raises(SpecVerificationError) as ei:
+        pipelined_spec_from_schedule(bad, ("rej", "pipe"), verify=True)
+    assert "edge-disjointness" in {v.code for v in
+                                   ei.value.report.violations}
+    assert "pipelined_spec_from_schedule" in str(ei.value)
+    with pytest.raises(SpecVerificationError):
+        fused_spec_from_schedule(bad, ("rej", "fused"), verify=True)
+    with pytest.raises(SpecVerificationError):
+        striped_spec_from_schedule(bad, ("rej", "striped"), verify=True)
+
+
+def test_verify_true_rechecks_cache_hits():
+    """verify=True forces a full check even when the compiler returns a
+    cached spec object."""
+    sched = sched_for("torus4x4")
+    a = pipelined_spec_from_schedule(sched, ("data",))
+    b = pipelined_spec_from_schedule(sched, ("data",), verify=True)
+    assert a is b                      # same cached object, re-verified
+
+
+# ---------------------------------------------------------------------------
+# HLO contract linter
+# ---------------------------------------------------------------------------
+
+FAKE_HLO = """\
+ENTRY %main (p0: f32[16]) -> f32[16] {
+  %p0 = f32[16]{0} parameter(0)
+  %cp0 = f32[16]{0} collective-permute(f32[16]{0} %p0), channel_id=1
+  %cp1 = s8[18]{0} collective-permute-start(s8[18]{0} %w), channel_id=2
+  %ar = f32[16]{0} all-reduce(f32[16]{0} %cp0), to_apply=%add
+  %done = s8[18]{0} collective-permute-done(s8[18]{0} %cp1)
+  ROOT %out = f32[16]{0} add(f32[16]{0} %cp0, f32[16]{0} %done)
+}
+"""
+
+
+def test_collective_sites_flat():
+    sites = collective_sites(FAKE_HLO)
+    perms = [s for s in sites if s.kind == "collective-permute"]
+    assert len(perms) == 2             # -start counted, -done not
+    assert {(s.dtype, s.elems) for s in perms} == {("f32", 16), ("s8", 18)}
+    assert any(s.kind == "all-reduce" for s in sites)
+
+
+def test_lint_hlo_contract():
+    ok = HloContract(ppermutes=2, max_f32_sites=1, max_f32_wire_elems=16)
+    assert lint_hlo(FAKE_HLO, ok) == []
+    bad_count = lint_hlo(FAKE_HLO, HloContract(ppermutes=5))
+    assert bad_count and "site count 2 != contracted 5" in bad_count[0]
+    bad_f32 = lint_hlo(FAKE_HLO, HloContract(max_f32_sites=0))
+    assert bad_f32 and "f32-wire" in bad_f32[0]
+    bad_wire = lint_hlo(FAKE_HLO, HloContract(max_f32_wire_elems=8))
+    assert bad_wire and "packed-lane cap" in bad_wire[0]
+
+
+def test_hlo_contract_for_pipelined():
+    spec = pipelined_spec_from_schedule(sched_for("torus4x4"), ("data",))
+    c = hlo_contract_for(spec)
+    assert c.ppermutes == len(spec.waves)
+    assert c.max_f32_sites is None     # f32 wires unconstrained un-quantized
+    q = hlo_contract_for(spec, quantize=True, m=53)
+    assert q.ppermutes == len(spec.q8_waves)
+    assert q.max_f32_sites == len(spec.q8_waves) - spec.q8_boundary
+    mrow = -(-53 // spec.k)
+    assert q.max_f32_wire_elems == -(-mrow // 4) + 2
+    assert q.max_f32_wire_elems < mrow  # a full row must trip the linter
+
+
+def test_hlo_contract_for_fused_and_striped():
+    sched = sched_for("torus4x4")
+    f = fused_spec_from_schedule(sched, ("data",))
+    assert hlo_contract_for(f).ppermutes == f.num_collectives
+    s = striped_spec_from_schedule(sched, ("data",))
+    assert hlo_contract_for(s).ppermutes == len(s.waves)
+    # striped wires are never quantized: contract ignores quantize=True
+    assert hlo_contract_for(s, quantize=True).max_f32_sites is None
+
+
+# ---------------------------------------------------------------------------
+# AST repo lint
+# ---------------------------------------------------------------------------
+
+def test_repo_lint_clean():
+    assert lint_paths([SRC]) == []
+
+
+def test_lint_spec_construct():
+    src = "spec = FusedAllreduceSpec(n=4, k=1)\n"
+    bad = lint_source(src, "src/repro/launch/foo.py")
+    assert [f.rule for f in bad] == ["spec-construct"]
+    # the defining compiler module is allowed to construct its own specs
+    assert lint_source(src, "src/repro/core/collectives.py") == []
+
+
+def test_lint_axis_literal():
+    src = ("def f(x):\n"
+           "    return jax.lax.ppermute(x, 'data', perm=[(0, 1)])\n")
+    bad = lint_source(src, "src/repro/dist/foo.py")
+    assert [f.rule for f in bad] == ["axis-literal"]
+    # outside dist/ the rule does not apply (analysis helpers may pin axes)
+    assert lint_source(src, "src/repro/analysis/foo.py") == []
+    ok = ("def f(spec, x):\n"
+          "    return jax.lax.ppermute(x, _axis_arg(spec.axes), perm=p)\n")
+    assert lint_source(ok, "src/repro/dist/foo.py") == []
+
+
+def test_lint_traced_table_build():
+    src = ("def outer(spec):\n"
+           "    def step(x):\n"
+           "        t = jnp.asarray([1, 2, 3])\n"
+           "        return x + t\n"
+           "    return step\n")
+    bad = lint_source(src, "src/repro/dist/foo.py")
+    assert "traced-table-build" in {f.rule for f in bad}
+    # module-level table prep is the idiom, not a violation
+    ok = "TABLE = np.asarray([1, 2, 3])\n"
+    assert lint_source(ok, "src/repro/dist/foo.py") == []
+
+
+def test_lint_nested_numpy():
+    src = ("def outer():\n"
+           "    def inner(x):\n"
+           "        return np.roll(x, 1)\n"
+           "    return inner\n")
+    bad = lint_source(src, "src/repro/dist/foo.py")
+    assert [f.rule for f in bad] == ["nested-numpy"]
+    # jnp in a traced body is exactly right
+    ok = src.replace("np.roll", "jnp.roll")
+    assert lint_source(ok, "src/repro/dist/foo.py") == []
