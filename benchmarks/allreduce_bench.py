@@ -9,7 +9,10 @@ Three families of entries:
     the row records), the striped reduce-scatter/allgather engine
     (stripe-sized wires, ~2x the wave count: slower on this
     alpha-dominated host -- that IS the datapoint the engine-selection
-    matrix documents), the fused global-round and per-tree baselines,
+    matrix documents), the ``zero1`` train-step stand-in (reduce-scatter
+    -> owner-stripe update -> params allgather: the same stripe program
+    minus the gradient allgather, so its row records ``waves`` vs
+    ``composed_waves``), the fused global-round and per-tree baselines,
     and ``jax.lax.psum``, each with and without the int8 wire, on the
     (4,4) and (2,8) torus DP fabrics.  Cases are timed *interleaved*
     (every engine once per block, best block wins) so slow drift on
@@ -65,10 +68,11 @@ from repro.core.collectives import (CostModel,  # noqa: E402
                                     fused_spec_from_schedule,
                                     pipelined_spec_from_schedule,
                                     striped_spec_from_schedule,
-                                    tree_schedule)
+                                    striped_tables, tree_schedule)
 from repro.core.csr import tree_center  # noqa: E402
 from repro.core.edst_star import star_edsts  # noqa: E402
-from repro.dist.striped import striped_allreduce  # noqa: E402
+from repro.dist.striped import (striped_allreduce,  # noqa: E402
+                                tree_allgather, tree_reduce_scatter)
 from repro.dist.tree_allreduce import (auto_segments,  # noqa: E402
                                        fused_tree_allreduce,
                                        per_tree_allreduce,
@@ -155,9 +159,22 @@ def bench_executors(results: dict, elems: int, iters: int) -> None:
                 mesh=mesh, in_specs=P("data"), out_specs=P("data")))
             return lambda: jax.block_until_ready(f(x))
 
+        # zero1 step stand-in: RS grads -> elementwise owner-stripe
+        # update -> AG params (full precision, like the real step); the
+        # gradient allgather of the composed allreduce never runs, so
+        # the row's wave count is rs+ag of the *same* stripe program
+        bt = striped_tables(sspec, elems)
+        z_waves = len(bt.rs_waves) + len(bt.ag_waves)
+
+        def zero1_body(v, quantize=False):
+            owned = tree_reduce_scatter(v, sspec, quantize=quantize)
+            owned = owned * (0.999 / sp.n)
+            return tree_allgather(owned, sspec, v.shape)
+
         cases = {
             "pipelined": lambda v: pipelined_tree_allreduce(v, pspec),
             "striped": lambda v: striped_allreduce(v, sspec),
+            "zero1": zero1_body,
             "fused": lambda v: fused_tree_allreduce(v, fspec),
             "per_tree": lambda v: per_tree_allreduce(v, lspec),
             "psum": lambda v: jax.lax.psum(v, "data"),
@@ -168,6 +185,7 @@ def bench_executors(results: dict, elems: int, iters: int) -> None:
                     v, pspec, quantize=True),
                 "striped_q8": lambda v: striped_allreduce(v, sspec,
                                                           quantize=True),
+                "zero1_q8": lambda v: zero1_body(v, quantize=True),
                 "fused_q8": lambda v: fused_tree_allreduce(v, fspec,
                                                            quantize=True),
                 "per_tree_q8": lambda v: per_tree_allreduce(v, lspec,
@@ -190,7 +208,8 @@ def bench_executors(results: dict, elems: int, iters: int) -> None:
             # counterpart's measurement rather than re-timing the same
             # executable into measurement noise (the striped engine's
             # allgather wire is disabled by codec="off" too)
-            for eng in ("pipelined", "striped", "fused", "per_tree"):
+            for eng in ("pipelined", "striped", "zero1", "fused",
+                        "per_tree"):
                 timed[f"{eng}_q8"] = timed[eng]
         timed.update(_time_interleaved(
             {n: jitted(b) for n, b in sweep.items()}, max(2, iters // 6)))
@@ -208,6 +227,10 @@ def bench_executors(results: dict, elems: int, iters: int) -> None:
                                    if "_s" in engine else auto_s)
             if engine.startswith("striped"):
                 row["stripes"] = sp.n
+            if engine.startswith("zero1"):
+                row["stripes"] = sp.n
+                row["waves"] = z_waves
+                row["composed_waves"] = len(bt.waves)
             if engine.endswith("_q8"):
                 row["codec"] = codec
             results[f"exec/{label}/{engine}"] = row
@@ -288,14 +311,19 @@ def main() -> None:
     for label, _ in EXEC_FABRICS:
         rows = {e: results[f"exec/{label}/{e}"]["us_per_call"]
                 for e in ("pipelined", "pipelined_q8", "striped",
-                          "striped_q8", "fused", "fused_q8",
+                          "striped_q8", "zero1", "zero1_q8",
+                          "fused", "fused_q8",
                           "per_tree", "per_tree_q8", "psum")}
+        zrow = results[f"exec/{label}/zero1"]
         print(f"{label}: fused/pipelined = "
               f"{rows['fused'] / rows['pipelined']:.2f}x   "
               f"striped/pipelined = "
               f"{rows['striped'] / rows['pipelined']:.2f}x   "
               f"psum/pipelined = {rows['psum'] / rows['pipelined']:.2f}x")
-        for eng in ("pipelined", "striped", "fused", "per_tree"):
+        print(f"  zero1/striped = {rows['zero1'] / rows['striped']:.2f}x  "
+              f"waves {zrow['waves']} vs composed "
+              f"{zrow['composed_waves']}")
+        for eng in ("pipelined", "striped", "zero1", "fused", "per_tree"):
             flag = "OK" if rows[f"{eng}_q8"] <= rows[eng] else "REGRESSION"
             print(f"  {eng}_q8 vs {eng}: "
                   f"{rows[f'{eng}_q8'] / rows[eng]:.2f}x [{flag}]")

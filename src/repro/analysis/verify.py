@@ -55,6 +55,8 @@ Violation codes (each maps to one invariant; mutation tests in
   ``message-conservation`` wrong per-edge or per-program message multiset
   ``happens-before``   a message scheduled no later than a predecessor
   ``stripe-conservation`` slot windows do not partition the owner circle
+  ``stale-ownership``  spec.trees ownership slots disagree with the routed
+                       windows (stripe table not re-striped after failover)
   ``depth-mismatch``   spec.depth disagrees with the recovered trees
   ==================== ====================================================
 
@@ -667,6 +669,22 @@ def _check_striped_structure(spec, msgs, expected_kinds, label: str,
                     f"{label}: tree {j}: child {c}'s below-window holds "
                     f"{below[0][1]} slots but its recovered subtree has "
                     f"{size.get(c)}"))
+            # the ownership table (DFS preorder slots) executors cut own
+            # stripes with must agree with the routed windows: a preorder
+            # subtree owns exactly [pre[c], pre[c]+size[c]) -- a stale
+            # table kept across a re-striping failover silently
+            # mis-slices every owner cut
+            if below and clean and j < len(spec.trees):
+                st = spec.trees[j]
+                if (int(st.pre[c]) != below[0][0]
+                        or int(st.size[c]) != below[0][1]):
+                    out.append(Violation(
+                        "stale-ownership",
+                        f"{label}: tree {j}: ownership table says child "
+                        f"{c} owns slots [{int(st.pre[c])}, "
+                        f"+{int(st.size[c])}) but the routed below-window "
+                        f"is {below[0]} -- stripe table is stale w.r.t. "
+                        "the routing (re-stripe after failover)"))
         # child windows nest inside the parent's below window
         if all(len(slot) == len(expected_kinds) for slot in
                per_edge.values()):
@@ -834,7 +852,8 @@ def assert_valid(spec, level: str = "full", context: str = "") -> VerifyReport:
 # ---------------------------------------------------------------------------
 
 def hlo_contract_for(spec, quantize: bool = False,
-                     m: int | None = None) -> HloContract:
+                     m: int | None = None,
+                     phase: str = "composed") -> HloContract:
     """The HLO contract a correct executor compile of ``spec`` satisfies,
     enforced by :func:`repro.analysis.hlo.lint_hlo`:
 
@@ -844,8 +863,19 @@ def hlo_contract_for(spec, quantize: bool = False,
         sites in the HLO (reduce wires are int8; broadcast wires are the
         bit-packed f32 lanes), and every f32 wire is the *packed* width,
         never a full ``mrow``-element row.
+
+    ``phase`` (striped engine only) selects which program the executor
+    compiled: ``"composed"`` (``striped_allreduce``), ``"rs"`` / ``"ag"``
+    (the standalone reduce-scatter / allgather), or ``"zero1"`` (one
+    zero1 train step: gradient reduce-scatter + param allgather, no
+    composed program) -- the contract under which the zero1 step proves
+    it issues strictly fewer collective waves than the composed
+    allreduce.
     """
     engine = engine_of(spec)
+    if phase != "composed" and engine != "striped":
+        raise ValueError(f"phase={phase!r} needs the striped engine; "
+                         f"{engine} compiles only the composed program")
     ppermutes: int | None
     max_f32_sites = None
     max_f32_wire = None
@@ -862,9 +892,26 @@ def hlo_contract_for(spec, quantize: bool = False,
                         for t in spec.trees)
         if quantize:
             max_f32_sites = sum(len(t.bcast_rounds) for t in spec.trees)
-    else:                              # striped: f32 wires only, no codec
-        ppermutes = (len(striped_tables(spec, m).waves) if m
-                     else len(spec.waves))
+    else:                              # striped: f32 payload sites, and
+        # a ``phase`` choosing the compiled program (see docstring);
+        # binding to a payload size m drops empty-stripe waves exactly
+        # like the executor does
+        bound = striped_tables(spec, m) if m else None
+
+        def _nwaves(name):
+            return len(getattr(bound if m else spec, name))
+
+        if phase == "composed":
+            ppermutes = _nwaves("waves")
+        elif phase == "rs":
+            ppermutes = _nwaves("rs_waves")
+        elif phase == "ag":
+            ppermutes = _nwaves("ag_waves")
+        elif phase == "zero1":
+            ppermutes = _nwaves("rs_waves") + _nwaves("ag_waves")
+        else:
+            raise ValueError(f"phase {phase!r} not in "
+                             "('composed', 'rs', 'ag', 'zero1')")
         quantize = False
     if quantize and m is not None and spec.k:
         mrow = -(-m // spec.k)

@@ -8,6 +8,16 @@ point and restarts from the last complete step.
 Arrays are gathered to host (fully replicated view) on save and re-placed
 with the *current* mesh's shardings on restore, so restores work across
 different mesh shapes (elastic rescaling) as long as logical shapes match.
+
+ZeRO-1 owner-stripe state gets its own pair of entry points
+(:func:`save_sharded_checkpoint` / :func:`restore_sharded`): each host
+writes one ``shard_<v>.npz`` holding only its ``(kmax, smax)`` stripe rows
+of ``mu`` / ``nu`` plus the element-id map that says which flat payload
+slot each stripe cell owns.  Restore re-assembles the flat vectors from
+the saved maps and re-scatters them to the *target* fabric's map -- which
+may be a different topology, a degraded k-1 fabric, or a different
+(kmax, smax) geometry entirely -- so a checkpoint taken on a healthy
+fabric restores cleanly onto a re-striped one.
 """
 from __future__ import annotations
 
@@ -19,12 +29,21 @@ import tempfile
 import jax
 import numpy as np
 
+from ..optim.sharded import ShardedOptState
+
+
+def _esc(k) -> str:
+    """Escape one tree key for the "/"-joined flat namespace.  Without
+    this, ``{"a": {"b/c": x}}`` and ``{"a/b": {"c": x}}`` flatten to the
+    same ``"a/b/c"`` key and silently clobber each other in the npz."""
+    return str(k).replace("%", "%25").replace("/", "%2F")
+
 
 def _flatten(tree, prefix=""):
     out = {}
     if isinstance(tree, dict):
         for k in sorted(tree):
-            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+            out.update(_flatten(tree[k], f"{prefix}{_esc(k)}/"))
     elif isinstance(tree, (list, tuple)):
         for i, v in enumerate(tree):
             out.update(_flatten(v, f"{prefix}{i}/"))
@@ -35,7 +54,7 @@ def _flatten(tree, prefix=""):
 
 def _unflatten_into(template, flat, prefix=""):
     if isinstance(template, dict):
-        return {k: _unflatten_into(template[k], flat, f"{prefix}{k}/")
+        return {k: _unflatten_into(template[k], flat, f"{prefix}{_esc(k)}/")
                 for k in template}
     if isinstance(template, (list, tuple)):
         typ = type(template)
@@ -47,16 +66,13 @@ def _unflatten_into(template, flat, prefix=""):
     return flat[prefix[:-1]]
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None):
+def _commit_step_dir(ckpt_dir: str, step: int, write_fn) -> str:
+    """Shared atomic-publish path: ``write_fn(tmp_dir)`` stages the files,
+    then one os.rename makes the step visible; keeps the 2 newest steps."""
     os.makedirs(ckpt_dir, exist_ok=True)
-    flat = _flatten(tree)
-    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
     tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
     try:
-        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump({"step": step, "keys": sorted(arrays),
-                       "extra": extra or {}}, f)
+        write_fn(tmp)
         final = os.path.join(ckpt_dir, f"step_{step:08d}")
         if os.path.exists(final):
             shutil.rmtree(final)
@@ -64,11 +80,23 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None):
     finally:
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
-    # keep the two most recent checkpoints
     steps = sorted(latest_steps(ckpt_dir))
     for s in steps[:-2]:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"))
     return final
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None):
+    flat = _flatten(tree)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+
+    def write(tmp):
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "keys": sorted(arrays),
+                       "extra": extra or {}}, f)
+
+    return _commit_step_dir(ckpt_dir, step, write)
 
 
 def latest_steps(ckpt_dir: str):
@@ -111,3 +139,100 @@ def restore(ckpt_dir: str, template, step: int | None = None,
         tree = jax.tree.map(jax.numpy.asarray, tree)
     # cast back to template dtypes (npz stores concrete dtypes already)
     return tree, step, manifest.get("extra", {})
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 owner-stripe checkpoints
+# ---------------------------------------------------------------------------
+
+def save_sharded_checkpoint(ckpt_dir: str, step: int, params,
+                            opt_state: ShardedOptState, elem_map, size: int,
+                            extra: dict | None = None, hosts=None):
+    """Sharded ZeRO-1 save: params (replicated) go to ``arrays.npz``; each
+    owner host ``v`` writes ``shard_<v>.npz`` with its ``mu`` / ``nu``
+    stripe rows and the ``(kmax, smax)`` element-id row saying which flat
+    payload slots those cells hold (-1 = padding).  ``elem_map`` is the
+    ``(n, kmax, smax)`` ownership map of the fabric the state was trained
+    on -- :func:`repro.core.collectives.owner_element_map` for a plain
+    spec, :meth:`repro.dist.fault.FaultAwareAllreduce.zero1_element_map`
+    for the active failure class.  ``hosts`` restricts which shard files
+    this process writes (multi-host: each process passes its own ranks);
+    default writes all of them."""
+    elem = np.asarray(elem_map)
+    n = int(elem.shape[0])
+    mu = np.asarray(jax.device_get(opt_state.mu))
+    nu = np.asarray(jax.device_get(opt_state.nu))
+    flat = _flatten(params)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    ranks = range(n) if hosts is None else list(hosts)
+
+    def write(tmp):
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        for v in ranks:
+            np.savez(os.path.join(tmp, f"shard_{int(v):05d}.npz"),
+                     mu=mu[v], nu=nu[v], elem=elem[v])
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "keys": sorted(arrays),
+                       "sharded": {
+                           "size": int(size), "n": n,
+                           "kmax": int(elem.shape[1]),
+                           "smax": int(elem.shape[2]),
+                           "opt_step": int(np.asarray(
+                               jax.device_get(opt_state.step)))},
+                       "extra": extra or {}}, f)
+
+    return _commit_step_dir(ckpt_dir, step, write)
+
+
+def restore_sharded(ckpt_dir: str, params_template, elem_map,
+                    step: int | None = None, param_shardings=None,
+                    state_shardings=None):
+    """Restore a sharded ZeRO-1 checkpoint onto the fabric described by
+    ``elem_map`` (the *target* ``(n', kmax', smax')`` ownership map --
+    pass the save-time map to get the saved layout back bitwise, or a
+    different fabric's map to re-shard).  Re-assembles the flat ``mu`` /
+    ``nu`` vectors from the per-host shard files via their saved element
+    maps, then scatters them to the target map, so save and restore
+    geometries never need to match.  Returns
+    ``(params, ShardedOptState, step, extra)`` or ``(None,) * 4`` when
+    the directory holds no checkpoint."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        return None, None, None, None
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    geom = manifest["sharded"]
+    size = int(geom["size"])
+
+    mu_flat = np.zeros(size, np.float32)
+    nu_flat = np.zeros(size, np.float32)
+    for v in range(int(geom["n"])):
+        shard = np.load(os.path.join(path, f"shard_{v:05d}.npz"))
+        e = shard["elem"]
+        mask = e >= 0
+        mu_flat[e[mask]] = shard["mu"][mask]
+        nu_flat[e[mask]] = shard["nu"][mask]
+
+    tgt = np.asarray(elem_map)
+    mu = np.zeros(tgt.shape, np.float32)
+    nu = np.zeros(tgt.shape, np.float32)
+    live = tgt >= 0
+    mu[live] = mu_flat[tgt[live]]
+    nu[live] = nu_flat[tgt[live]]
+
+    npz = np.load(os.path.join(path, "arrays.npz"))
+    params = _unflatten_into(params_template, {k: npz[k] for k in npz.files})
+    if param_shardings is not None:
+        params = jax.tree.map(lambda x, s: jax.device_put(x, s),
+                              params, param_shardings)
+    else:
+        params = jax.tree.map(jax.numpy.asarray, params)
+
+    state = ShardedOptState(
+        jax.numpy.asarray(geom["opt_step"], jax.numpy.int32),
+        jax.numpy.asarray(mu), jax.numpy.asarray(nu))
+    if state_shardings is not None:
+        state = jax.tree.map(lambda x, s: jax.device_put(x, s),
+                             state, state_shardings)
+    return params, state, step, manifest.get("extra", {})

@@ -1086,6 +1086,34 @@ def striped_tables(spec: StripedCollectiveSpec, size: int,
         ag_waves=_bind_waves(spec, spec.ag_waves, offsets, mrow))
 
 
+@functools.lru_cache(maxsize=256)
+def owner_element_map(spec: StripedCollectiveSpec, size: int,
+                      fractions=None) -> np.ndarray:
+    """Element-level ownership of one (spec, payload size, fractions)
+    bind: ``map[v, j, i]`` is the flat payload index of the ``i``-th
+    element of vertex ``v``'s owner stripe in tree ``j`` (the exact
+    layout ``tree_reduce_scatter`` hands back), or ``-1`` where the
+    ``(k, smax)`` stripe stack is padding.  Every payload element
+    appears exactly once, so the map converts owner-stripe state (ZeRO-1
+    optimizer moments, sharded checkpoints) between any two stripe
+    geometries -- healthy vs degraded fractions, k vs k-1 trees, or
+    different fabrics entirely.  Cached and returned read-only."""
+    t = striped_tables(spec, size, fractions)
+    out = np.full((spec.n, spec.k, t.smax), -1, np.int64)
+    chunk_off = np.zeros(spec.k + 1, np.int64)
+    chunk_off[1:] = np.cumsum(t.sizes)
+    for j in range(spec.k):
+        for v in range(spec.n):
+            # single-slot windows never wrap the circular row
+            off, ln = int(t.own_off[j, v]), int(t.own_len[j, v])
+            width = min(ln, int(t.sizes[j]) - off)   # trim row padding
+            if width > 0:
+                out[v, j, :width] = chunk_off[j] + off \
+                    + np.arange(width, dtype=np.int64)
+    out.setflags(write=False)
+    return out
+
+
 @dataclass
 class StripedSimResult:
     ok: bool

@@ -12,8 +12,9 @@ Four modules wire the paper's edge-disjoint-spanning-tree constructions
     tree_allgather / striped_allreduce collectives: owner stripes per
     vertex, stripe-sized wires instead of full-chunk hops;
   * :mod:`repro.dist.steps`          -- sharded train steps with selectable
-    gradient sync (gspmd | psum_dp | edst) and the mesh -> star-product
-    decomposition chooser;
+    gradient sync (gspmd | psum_dp | edst), the mesh -> star-product
+    decomposition chooser, and the ZeRO-1 path (``zero1=True``:
+    reduce-scatter grads -> owner-stripe AdamW -> allgather params);
   * :mod:`repro.dist.pipeline`       -- GPipe microbatch schedule over a
     'stage' mesh axis;
   * :mod:`repro.dist.fault`          -- elastic EDST runtime: precompiled

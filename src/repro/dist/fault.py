@@ -40,9 +40,10 @@ from ..core.collectives import (AllreduceSchedule, CostModel,
                                 FusedAllreduceSpec, PipelinedAllreduceSpec,
                                 StripedCollectiveSpec, allreduce_schedule,
                                 empty_pipelined_spec, empty_striped_spec,
+                                owner_element_map,
                                 pipelined_spec_from_schedule,
                                 simulate_allreduce,
-                                striped_spec_from_schedule)
+                                striped_spec_from_schedule, striped_tables)
 from ..core.edst_rt import max_edsts
 from ..core.fault import FailureEvent, rebalance_chunks
 from ..core.graph import Graph, canon
@@ -108,6 +109,15 @@ def striped_tree_allreduce(x, spec, fractions, quantize: bool = False,
                                     fractions=fractions)
 
 
+def _pad_stripes(owned, kmax: int, smax: int):
+    """Zero-pad a (k, s) stripe stack to the runtime-wide (kmax, smax)
+    so every switch branch returns one common shape."""
+    k, s = owned.shape
+    if k == kmax and s == smax:
+        return owned
+    return jnp.pad(owned, ((0, kmax - k), (0, smax - s)))
+
+
 def _entry(name: str, n: int, trees, axes,
            engine: str = "pipelined") -> ScheduleEntry:
     trees = [frozenset(canon(*e) for e in t) for t in trees]
@@ -144,6 +154,9 @@ class FaultAwareAllreduce:
     active: int = 0
     history: list = field(default_factory=list)
     engine: str = "pipelined"      # compiled form of every entry's spec
+    # jitted stripe-permutation gathers, keyed (from_id, to_id, size);
+    # shared across on_failure replaces so a flip never recompiles
+    _reshard_cache: dict = field(default_factory=dict, repr=False)
 
     @classmethod
     def build(cls, graph: Graph, trees, axis_names,
@@ -255,6 +268,154 @@ class FaultAwareAllreduce:
             return jax.lax.switch(schedule_id, branches, x)
 
         return allreduce
+
+    # -- ZeRO-1: scattered-domain primitives --------------------------------
+
+    def _require_striped(self):
+        if self.engine != "striped":
+            raise ValueError(
+                "zero1 needs the reduce-scatter/allgather split: build the "
+                "runtime with engine='striped'")
+
+    def zero1_geometry(self, size: int) -> tuple:
+        """(kmax, smax): the padded stripe-stack shape covering every
+        precompiled failure class for a ``size``-element payload -- the
+        shape of the zero1 optimizer state (see
+        :func:`repro.optim.sharded.zero1_geometry`)."""
+        self._require_striped()
+        kmax = max(e.k for e in self.entries)
+        smax = max(striped_tables(e.spec, size, e.fractions).smax
+                   for e in self.entries if e.k > 0)
+        return kmax, smax
+
+    def zero1_element_map(self, size: int,
+                          entry_id: int | None = None) -> np.ndarray:
+        """Element ownership of one failure class, padded to the
+        runtime-wide ``(n, kmax, smax)`` (``-1`` = padding): row ``v``
+        names the flat payload indices device ``v`` owns under that
+        schedule.  This is the stripe geometry sharded checkpoints save
+        alongside the moment stripes."""
+        kmax, smax = self.zero1_geometry(size)
+        e = self.entries[self.active if entry_id is None else entry_id]
+        out = np.full((self.graph.n, kmax, smax), -1, np.int64)
+        if e.k > 0:
+            m = owner_element_map(e.spec, size, e.fractions)
+            out[:, :m.shape[1], :m.shape[2]] = m
+        return out
+
+    def owned_permutation(self, from_id: int, to_id: int,
+                          size: int) -> np.ndarray:
+        """The precompiled stripe permutation between two failure
+        classes: ``perm[v, j, i]`` is the linear index into the
+        flattened ``(n, kmax, smax)`` ``from_id``-layout state of the
+        element that lands at ``[v, j, i]`` under ``to_id`` (``-1`` =
+        padding).  Pure NumPy over the cached element maps -- build it
+        (and :meth:`reshard_owned`'s jit) ahead of the failure so the
+        link-kill flip stays retrace-free end to end."""
+        kmax, smax = self.zero1_geometry(size)
+        map_a = self.zero1_element_map(size, from_id)
+        map_b = self.zero1_element_map(size, to_id)
+        inv = np.full(size, -1, np.int64)
+        va, ja, ia = np.nonzero(map_a >= 0)
+        inv[map_a[va, ja, ia]] = (va * kmax + ja) * smax + ia
+        perm = np.full((self.graph.n, kmax, smax), -1, np.int64)
+        vb, jb, ib = np.nonzero(map_b >= 0)
+        perm[vb, jb, ib] = inv[map_b[vb, jb, ib]]
+        return perm
+
+    def reshard_owned(self, arr, from_id: int, to_id: int, size: int):
+        """Re-shard ``(ndp, kmax, smax)`` owner-stripe state (zero1
+        ``mu`` / ``nu``) from one failure class's ownership to
+        another's: a single precompiled gather, exact (a permutation of
+        the same elements).  Runs OUTSIDE the train step -- the step's
+        ``schedule_id`` switch handles the collectives, this handles the
+        moments the flip strands on old owners.  The jitted gather is
+        cached per (from_id, to_id, size), so repeated flips (and the
+        flip back) never recompile."""
+        self._require_striped()
+        key = (from_id, to_id, int(size))
+        fn = self._reshard_cache.get(key)
+        if fn is None:
+            perm = jnp.asarray(self.owned_permutation(from_id, to_id, size))
+
+            def _apply(a):
+                flat = a.reshape(-1)
+                out = flat[jnp.clip(perm, 0, flat.size - 1)]
+                return jnp.where(perm >= 0, out,
+                                 jnp.zeros((), a.dtype)).reshape(a.shape)
+
+            fn = jax.jit(_apply)
+            self._reshard_cache[key] = fn
+        out = fn(arr)
+        # keep the caller's placement: zero1 state lives sharded P(dp) in
+        # the train step's jit cache, and a flip that hands back a
+        # single-device array would force a recompile on the next step.
+        sharding = getattr(arr, "sharding", None)
+        if sharding is not None:
+            out = jax.device_put(out, sharding)
+        return out
+
+    def make_zero1_sync(self, quantize: bool = False, codec=None):
+        """The three scattered-domain primitives of the zero1 step, each
+        a ``jax.lax.switch`` over the precompiled failure classes (same
+        traced ``schedule_id`` contract as :meth:`make_allreduce`):
+
+          * ``rs(flat, sid)``    -- gradient reduce-scatter -> (kmax, smax)
+            summed owner stripes (codec policy applies to these wires);
+          * ``slices(flat, sid)`` -- communication-free owner-stripe cut
+            of a replicated vector (params, decay mask);
+          * ``ag(owned, sid, shape)`` -- allgather of updated params.
+            Always full precision: optimizer-state-derived params must
+            not accumulate wire quantization error across steps, so the
+            codec compresses only the transient gradient wires.
+
+        Every branch pads to the runtime-wide geometry, so the jit cache
+        stays flat across schedule-id flips; ``k=0`` entries (k=1
+        fabrics with nothing to repack from, unreachable via
+        ``on_failure``) return zeros."""
+        self._require_striped()
+        from .striped import stripe_slices, tree_allgather, \
+            tree_reduce_scatter
+        entries = self.entries
+
+        def rs(flat, sid):
+            kmax, smax = self.zero1_geometry(flat.size)
+
+            def branch(e):
+                if e.k == 0:
+                    return lambda v: jnp.zeros((kmax, smax), v.dtype)
+                return lambda v: _pad_stripes(
+                    tree_reduce_scatter(v, e.spec, e.fractions, quantize,
+                                        codec), kmax, smax)
+
+            return jax.lax.switch(sid, [branch(e) for e in entries], flat)
+
+        def slices(flat, sid):
+            kmax, smax = self.zero1_geometry(flat.size)
+
+            def branch(e):
+                if e.k == 0:
+                    return lambda v: jnp.zeros((kmax, smax), v.dtype)
+                return lambda v: _pad_stripes(
+                    stripe_slices(v, e.spec, e.fractions), kmax, smax)
+
+            return jax.lax.switch(sid, [branch(e) for e in entries], flat)
+
+        def ag(owned, sid, shape):
+            size = 1
+            for d in shape:
+                size *= int(d)
+
+            def branch(e):
+                if e.k == 0:
+                    return lambda o: jnp.zeros(shape, o.dtype)
+                smax_e = striped_tables(e.spec, size, e.fractions).smax
+                return lambda o: tree_allgather(
+                    o[:e.spec.k, :smax_e], e.spec, shape, e.fractions)
+
+            return jax.lax.switch(sid, [branch(e) for e in entries], owned)
+
+        return rs, slices, ag
 
     # -- reporting ----------------------------------------------------------
 

@@ -93,6 +93,27 @@ def spec_for(axes, shape, mesh, fsdp: bool = True) -> PartitionSpec:
     return PartitionSpec(*entries)
 
 
+def owner_stripe_spec(mesh) -> PartitionSpec:
+    """PartitionSpec for ZeRO-1 owner-stripe state: the leading axis of a
+    ``(ndp, kmax, smax)`` array is the owner device, split over the
+    data-parallel mesh axes so device ``d`` holds only its own stripe
+    rows; the stripe dims stay unsplit.  Meshes without a DP extent get
+    the replicated spec (zero1 has nothing to shard there)."""
+    names, total = _dp_axes(_axis_sizes(mesh))
+    if not names or total <= 1:
+        return PartitionSpec()
+    return PartitionSpec(_dp_entry(names))
+
+
+def zero1_state_shardings(opt_state, mesh):
+    """NamedSharding tree for a :class:`repro.optim.sharded.ShardedOptState`:
+    ``mu`` / ``nu`` take :func:`owner_stripe_spec`, the scalar step
+    replicates.  Use as jit in_shardings / device_put placement."""
+    stripe = jax.sharding.NamedSharding(mesh, owner_stripe_spec(mesh))
+    rep = jax.sharding.NamedSharding(mesh, PartitionSpec())
+    return type(opt_state)(rep, stripe, stripe)
+
+
 def _is_axes_leaf(x) -> bool:
     """A leaf of an axes tree is a (possibly empty) tuple of names/Nones;
     tuples of sub-trees (e.g. a (k, v) cache pair) are interior nodes."""

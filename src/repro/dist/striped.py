@@ -111,6 +111,20 @@ def _prep(x, spec, fractions):
     return axis, idx, flat, bound
 
 
+def _cut_own(state, spec, bound, idx):
+    """Cut this vertex's own stripe out of every (k, mrow) row (circular
+    windows never wrap for a single slot, so one roll + static slice
+    suffices); rows are zero-padded to the widest stripe ``smax``."""
+    own = []
+    for j in range(spec.k):
+        off = _gather(bound.own_off[j], idx)
+        length = _gather(bound.own_len[j], idx)
+        stripe = jnp.roll(state[j], -off)[:bound.smax]
+        own.append(jnp.where(jnp.arange(bound.smax) < length, stripe,
+                             jnp.zeros((), stripe.dtype)))
+    return jnp.stack(own)
+
+
 def tree_reduce_scatter(x, spec: StripedCollectiveSpec, fractions=None,
                         quantize: bool = False, codec=None):
     """Reduce-scatter of ``x`` over ``spec.axes``: returns the
@@ -125,16 +139,21 @@ def tree_reduce_scatter(x, spec: StripedCollectiveSpec, fractions=None,
     rs_wire, _ = _wires(quantize, codec, x.dtype)
     state = _rows_in(flat, bound.sizes, bound.mrow)
     state = _run_waves(state, bound.rs_waves, idx, axis, rs_wire, None)
-    # cut this vertex's own stripe out of every row (circular windows
-    # never wrap for a single slot, so one roll + static slice suffices)
-    own = []
-    for j in range(spec.k):
-        off = _gather(bound.own_off[j], idx)
-        length = _gather(bound.own_len[j], idx)
-        stripe = jnp.roll(state[j], -off)[:bound.smax]
-        own.append(jnp.where(jnp.arange(bound.smax) < length, stripe,
-                             jnp.zeros((), stripe.dtype)))
-    return jnp.stack(own)
+    return _cut_own(state, spec, bound, idx)
+
+
+def stripe_slices(x, spec: StripedCollectiveSpec, fractions=None):
+    """This vertex's ``(k, smax)`` owner stripes of a REPLICATED array
+    ``x`` -- the same cut :func:`tree_reduce_scatter` applies after its
+    reduce waves, with zero communication.  The ZeRO-1 train step uses
+    it to slice the (replicated) params and weight-decay mask into the
+    scattered domain the sharded optimizer updates in.  Must run inside
+    a ``shard_map`` whose manual axes include ``spec.axes``."""
+    if spec.k == 0 or x.size == 0:
+        return x
+    _, idx, flat, bound = _prep(x, spec, fractions)
+    state = _rows_in(flat, bound.sizes, bound.mrow)
+    return _cut_own(state, spec, bound, idx)
 
 
 def tree_allgather(owned, spec: StripedCollectiveSpec, shape,

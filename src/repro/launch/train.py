@@ -21,12 +21,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.ckpt import latest_step, restore, save_checkpoint
+from repro.ckpt import (latest_step, restore, restore_sharded,
+                        save_checkpoint, save_sharded_checkpoint)
+from repro.core.collectives import owner_element_map
 from repro.data import SyntheticLMStream
 from repro.dist import sharding as shd
-from repro.dist.steps import make_train_step
+from repro.dist.steps import dp_size, edst_spec_for_mesh, make_train_step
 from repro.models.api import build
-from repro.optim import AdamW, cosine_schedule
+from repro.optim import AdamW, ShardedAdamW, cosine_schedule
 from repro.optim.adamw import OptState
 
 
@@ -34,6 +36,16 @@ def parse_mesh(s: str):
     dims = tuple(int(x) for x in s.split(","))
     names = ("pod", "data", "model")[-len(dims):]
     return dims, names
+
+
+def _save(args, step, params, opt_state, zmap):
+    if args.zero1:
+        psize = sum(int(np.prod(p.shape, dtype=np.int64))
+                    for p in jax.tree.leaves(params))
+        save_sharded_checkpoint(args.ckpt_dir, step, params, opt_state,
+                                zmap, psize)
+    else:
+        save_checkpoint(args.ckpt_dir, step, {"p": params, "o": opt_state})
 
 
 def main(argv=None):
@@ -57,7 +69,13 @@ def main(argv=None):
     ap.add_argument("--edst-engine", default="pipelined",
                     choices=["pipelined", "striped", "fused"],
                     help="compiled allreduce form for --sync edst")
+    ap.add_argument("--zero1", action="store_true",
+                    help="ZeRO-1: reduce-scatter grads, owner-stripe "
+                         "AdamW, allgather params (forces --sync edst "
+                         "--edst-engine striped)")
     args = ap.parse_args(argv)
+    if args.zero1:
+        args.sync, args.edst_engine = "edst", "striped"
 
     cfg = configs.get(args.arch)
     if args.reduced:
@@ -72,18 +90,37 @@ def main(argv=None):
         params, axes = api.init(key)
         pshard = shd.tree_shardings(axes, params, mesh)
         params = jax.tree.map(jax.device_put, params, pshard)
-        opt_state = opt.init(params)
+        zspec = zmap = None
+        if args.zero1:
+            zspec = edst_spec_for_mesh(dims, names, engine="striped")
+            psize = sum(int(np.prod(p.shape, dtype=np.int64))
+                        for p in jax.tree.leaves(params))
+            zmap = owner_element_map(zspec, psize)
+            opt_state = ShardedAdamW(opt).init_for(
+                params, zspec, dp_size(mesh))
+            opt_state = jax.tree.map(
+                jax.device_put, opt_state,
+                shd.zero1_state_shardings(opt_state, mesh))
+        else:
+            opt_state = opt.init(params)
 
         step_fn = make_train_step(api, opt, mesh, mode=args.sync,
                                   quantize=args.quantize_grads,
-                                  engine=args.edst_engine)
+                                  engine=args.edst_engine,
+                                  zero1=args.zero1)
         jstep = jax.jit(step_fn, donate_argnums=(0, 1))
 
         start = 0
         if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
-            state, start, extra = restore(args.ckpt_dir,
-                                          {"p": params, "o": opt_state})
-            params, opt_state = state["p"], state["o"]
+            if args.zero1:
+                params, opt_state, start, extra = restore_sharded(
+                    args.ckpt_dir, params, zmap,
+                    state_shardings=shd.zero1_state_shardings(
+                        opt_state, mesh))
+            else:
+                state, start, extra = restore(args.ckpt_dir,
+                                              {"p": params, "o": opt_state})
+                params, opt_state = state["p"], state["o"]
             print(f"[train] resumed from step {start}")
 
         stream = SyntheticLMStream(cfg.vocab, args.seq, args.batch,
@@ -100,11 +137,9 @@ def main(argv=None):
                       f"gnorm {float(metrics['grad_norm']):.3f} "
                       f"lr {float(metrics['lr']):.2e} ({dt:.1f}s)")
             if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
-                save_checkpoint(args.ckpt_dir, step + 1,
-                                {"p": params, "o": opt_state})
+                _save(args, step + 1, params, opt_state, zmap)
         if args.ckpt_dir:
-            save_checkpoint(args.ckpt_dir, args.steps,
-                            {"p": params, "o": opt_state})
+            _save(args, args.steps, params, opt_state, zmap)
     print(f"[train] done: first loss {losses[0]:.4f} -> last {losses[-1]:.4f}")
     return losses
 

@@ -1,0 +1,131 @@
+"""ZeRO-1 AdamW on EDST owner stripes: optimizer state lives scattered.
+
+:class:`ShardedAdamW` wraps the dense :class:`repro.optim.adamw.AdamW`
+so each device holds only its ``(k, smax)`` owner-stripe slice of the
+first/second moments -- the stripe geometry of
+:func:`repro.dist.striped.tree_reduce_scatter`.  A zero1 train step then
+reduce-scatters gradients, updates params in the scattered domain, and
+allgathers the updated *params only*: the gradient allgather of the
+composed allreduce disappears, optimizer memory drops ~n-fold, and the
+update math reproduces the dense optimizer exactly (bitwise in f32 up
+to float reassociation of the global norm):
+
+  * clipping is a stripe-local partial sum of squares
+    (:meth:`ShardedAdamW.partial_sumsq`) + one scalar ``psum`` in the
+    caller -- owner stripes partition the payload exactly (padding is
+    zero), so the psum'd norm equals the dense global norm;
+  * :meth:`ShardedAdamW.update_stripes` is elementwise on stripes and
+    mirrors ``AdamW.apply`` term for term; padded entries carry
+    ``p = g = decay = 0`` and stay exactly zero through the update;
+  * per-leaf weight decay (2D+ leaves only) becomes the flat
+    :func:`decay_mask` vector over ``ravel_pytree`` order, sliced into
+    stripes alongside the params.
+
+The module is mesh-agnostic: nothing here names an axis or runs a
+collective.  The callers (:mod:`repro.dist.steps`,
+:mod:`repro.dist.fault`) own the reduce-scatter/allgather wiring and the
+one clipping psum.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .adamw import AdamW
+
+
+class ShardedOptState(NamedTuple):
+    """ZeRO-1 optimizer state.  ``mu`` / ``nu`` are global
+    ``(ndp, kmax, smax)`` f32 arrays whose leading axis is the owner
+    device -- shard them with the owner-stripe PartitionSpec
+    (:func:`repro.dist.sharding.owner_stripe_spec`) so device ``d``
+    holds only row ``d``.  ``step`` is the replicated scalar count."""
+    step: jax.Array
+    mu: jax.Array
+    nu: jax.Array
+
+
+def zero1_geometry(spec_or_runtime, size: int, fractions=None):
+    """``(kmax, smax)`` of the padded stripe stack a zero1 step carries
+    for a ``size``-element payload.  For a plain
+    :class:`StripedCollectiveSpec` this is its own bind; for a
+    :class:`repro.dist.fault.FaultAwareAllreduce` it is the maximum over
+    every precompiled failure-class entry, so one state shape serves all
+    schedule ids (the switch branches pad to it)."""
+    from ..core.collectives import striped_tables
+    entries = getattr(spec_or_runtime, "entries", None)
+    if entries is not None:
+        kmax = max(e.k for e in entries)
+        smax = max(striped_tables(e.spec, size, e.fractions).smax
+                   for e in entries if e.k > 0)
+        return kmax, smax
+    fr = None if fractions is None else tuple(fractions)
+    t = striped_tables(spec_or_runtime, size, fr)
+    return spec_or_runtime.k, t.smax
+
+
+def decay_mask(params, weight_decay: float) -> jax.Array:
+    """The flat f32 weight-decay vector over ``ravel_pytree(params)``
+    order: ``weight_decay`` on every element of a 2D+ leaf, 0 elsewhere
+    -- the per-leaf rule of ``AdamW.apply`` in the flat domain.  Built
+    from static leaf shapes, so calling it inside a traced step bakes a
+    constant, never a computation."""
+    parts = [np.full(int(np.prod(p.shape, dtype=np.int64)),
+                     weight_decay if p.ndim >= 2 else 0.0, np.float32)
+             for p in jax.tree.leaves(params)]
+    if not parts:
+        return jnp.zeros((0,), jnp.float32)
+    return jnp.asarray(np.concatenate(parts))
+
+
+@dataclass(frozen=True)
+class ShardedAdamW:
+    """Owner-stripe AdamW: the dense optimizer's math on ``(kmax, smax)``
+    stripe stacks.  See module docstring for the equivalence argument."""
+    base: AdamW
+
+    def init(self, ndp: int, kmax: int, smax: int) -> ShardedOptState:
+        zeros = jnp.zeros((ndp, kmax, smax), jnp.float32)
+        return ShardedOptState(jnp.zeros((), jnp.int32), zeros, zeros)
+
+    def init_for(self, params, spec_or_runtime, ndp: int,
+                 fractions=None) -> ShardedOptState:
+        """State sized for ``params`` sharded over ``ndp`` owner devices
+        with the given stripe geometry source (spec or fault runtime)."""
+        size = sum(int(np.prod(p.shape, dtype=np.int64))
+                   for p in jax.tree.leaves(params))
+        kmax, smax = zero1_geometry(spec_or_runtime, size, fractions)
+        return self.init(ndp, kmax, smax)
+
+    @staticmethod
+    def partial_sumsq(owned_g) -> jax.Array:
+        """This device's contribution to the squared global grad norm
+        (stripe padding is zero, owner stripes partition the payload, so
+        ``sqrt(psum(partial_sumsq))`` equals the dense global norm)."""
+        g32 = owned_g.astype(jnp.float32)
+        return jnp.sum(g32 * g32)
+
+    def update_stripes(self, p, g, decay, mu, nu, step, gnorm):
+        """One AdamW update on this device's stripes.
+
+        ``p`` / ``g`` / ``decay`` / ``mu`` / ``nu`` are ``(kmax, smax)``
+        f32 stripe stacks (params, mean grads, decay mask, moments);
+        ``step`` is the post-increment count and ``gnorm`` the psum'd
+        pre-clip global norm.  Returns ``(new_p, new_mu, new_nu, lr)``.
+        """
+        b = self.base
+        scale = jnp.minimum(1.0, b.clip_norm / (gnorm + 1e-9))
+        g32 = g.astype(jnp.float32) * scale
+        t = step.astype(jnp.float32)
+        m = b.b1 * mu + (1 - b.b1) * g32
+        v = b.b2 * nu + (1 - b.b2) * g32 * g32
+        mhat = m / (1 - b.b1 ** t)
+        vhat = v / (1 - b.b2 ** t)
+        delta = mhat / (jnp.sqrt(vhat) + b.eps)
+        lr = self.base.lr_fn(step)
+        new_p = p - lr * (delta + decay * p)
+        return new_p, m, v, lr

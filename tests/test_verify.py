@@ -154,6 +154,30 @@ def mutate_striped_op(label):
             "op-mixed")
 
 
+def mutate_drop_ag_wave(label):
+    """The last AG-only wave dropped: the zero1 params allgather would
+    silently never deliver some stripes.  Caught twice over -- the split
+    program stops moving the composed message multiset, and every edge
+    the wave carried loses its allgather leg."""
+    spec = striped_spec_from_schedule(sched_for(label), ("data",))
+    return (dataclasses.replace(spec, ag_waves=spec.ag_waves[:-1]),
+            "message-conservation")
+
+
+def mutate_stale_ownership(label):
+    """The DFS-preorder ownership table rolled one slot: the routing is
+    untouched (windows still conserve), but executors cut owner stripes
+    with ``trees[j].pre``/``size``, so every owner cut mis-slices -- the
+    failure mode of a stripe table kept across a re-striping failover.
+    Distinct from the dropped-wave code by design: table-vs-routing
+    staleness is not a transport bug."""
+    spec = striped_spec_from_schedule(sched_for(label), ("data",))
+    st0 = spec.trees[0]
+    rolled = dataclasses.replace(st0, pre=np.roll(st0.pre, 1))
+    return (dataclasses.replace(spec, trees=(rolled,) + spec.trees[1:]),
+            "stale-ownership")
+
+
 MUTATIONS = {
     "drop-recv-flag": mutate_drop_recv,
     "swap-two-sends": mutate_swap_sends,
@@ -163,7 +187,18 @@ MUTATIONS = {
     "fused-drop-recv": mutate_fused_drop_recv,
     "stripe-window": mutate_stripe_window,
     "striped-op-flip": mutate_striped_op,
+    "drop-ag-wave": mutate_drop_ag_wave,
+    "stale-ownership": mutate_stale_ownership,
 }
+
+
+def test_zero1_mutations_distinct_codes():
+    """The two zero1-path corruptions (a transport wave lost vs a stale
+    ownership table) must map to DIFFERENT named codes -- conflating
+    them would point the operator at the wrong layer."""
+    _, wave_code = mutate_drop_ag_wave("torus4x4")
+    _, table_code = mutate_stale_ownership("torus4x4")
+    assert wave_code != table_code
 
 
 @pytest.mark.parametrize("name", sorted(MUTATIONS))
@@ -280,6 +315,32 @@ def test_hlo_contract_for_fused_and_striped():
     assert hlo_contract_for(s).ppermutes == len(s.waves)
     # striped wires are never quantized: contract ignores quantize=True
     assert hlo_contract_for(s, quantize=True).max_f32_sites is None
+
+
+def test_hlo_contract_for_striped_phases():
+    """phase= selects the RS-only / AG-only / zero1 wave budgets, bound
+    to the payload: on torus4x4 k=2 the zero1 step (rs + ag, no gradient
+    allgather) must contract strictly fewer ppermutes than the composed
+    allreduce step -- the headline wave saving of the zero1 PR."""
+    sched = sched_for("torus4x4")
+    s = striped_spec_from_schedule(sched, ("data",))
+    m = 53
+    rs = hlo_contract_for(s, m=m, phase="rs")
+    ag = hlo_contract_for(s, m=m, phase="ag")
+    z = hlo_contract_for(s, m=m, phase="zero1")
+    comp = hlo_contract_for(s, m=m, phase="composed")
+    assert rs.ppermutes > 0 and ag.ppermutes > 0
+    assert z.ppermutes == rs.ppermutes + ag.ppermutes
+    assert z.ppermutes < comp.ppermutes
+    # unbound: whole-program wave counts
+    assert hlo_contract_for(s, phase="rs").ppermutes == len(s.rs_waves)
+    assert hlo_contract_for(s, phase="ag").ppermutes == len(s.ag_waves)
+    # phases are a striped-engine concept
+    p = pipelined_spec_from_schedule(sched, ("data",))
+    with pytest.raises(ValueError):
+        hlo_contract_for(p, phase="rs")
+    with pytest.raises(ValueError):
+        hlo_contract_for(s, phase="bogus")
 
 
 # ---------------------------------------------------------------------------
