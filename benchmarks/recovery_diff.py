@@ -1,0 +1,114 @@
+"""CI gate for the recovery trajectory: diff a fresh chaos-soak JSON
+(``benchmarks/chaos_soak.py``) against a committed baseline and fail
+when fault-recovery quality regresses.
+
+Unlike the perf gate (``bench_diff.py``) these rows are mostly
+*deterministic*: the soak holds the detection clock while background
+work is in flight, so ``mttr_ticks`` (probe ticks from first failed
+heartbeat to recovery) and ``steps_lost`` are functions of the seeded
+fault trace and the controller's ladder, not of host speed.  Wall-clock
+``mttr_s`` IS host-dependent (it absorbs the Roskind-Tarjan repack) and
+is never gated -- it is carried for trend reading only.
+
+Gate rules, per row kind:
+
+  * ``soak/<config>/totals`` -- hard invariants first:
+    ``unhandled_exceptions`` must be 0 and ``max_loss_diff`` (vs the
+    fault-free ``psum_dp`` reference over identical batches) must stay
+    under ``--loss-tol``; then ``steps_lost`` must not exceed
+    ``baseline * threshold`` (rounded up);
+  * ``soak/<config>/<kind>`` -- ``mttr_ticks`` must not exceed
+    ``baseline * threshold`` (rounded up, and at least baseline + 1 so
+    a 1-tick baseline is not frozen at exactly 1);
+  * a soak row present in the baseline but MISSING from the new run is
+    a failure -- a fault kind silently dropping out of the trace is a
+    coverage regression, not a pass.
+
+An empty comparison (no ``soak/*`` rows shared) disables the gate and is
+therefore itself an error, mirroring ``bench_diff.py``.
+
+    python -m benchmarks.recovery_diff \
+        --baseline BENCH_recovery_quick.json --new /tmp/new.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+
+def diff(baseline: dict, new: dict, threshold: float, loss_tol: float):
+    """(rows, failures): rows are (name, metric, base, new, note)."""
+    rows, failures = [], []
+
+    def check(name, metric, b, n, limit):
+        bad = n > limit
+        rows.append((name, metric, b, n,
+                     f"> {limit:g}  <-- FAIL" if bad else f"<= {limit:g}"))
+        if bad:
+            failures.append(f"{name}:{metric}")
+
+    for name in sorted(k for k in baseline if k.startswith("soak/")):
+        base = baseline[name]
+        if name not in new:
+            rows.append((name, "-", "-", "-", "missing  <-- FAIL"))
+            failures.append(f"{name}:missing")
+            continue
+        cur = new[name]
+        if name.endswith("/totals"):
+            check(name, "unhandled", base["unhandled_exceptions"],
+                  cur["unhandled_exceptions"], 0)
+            check(name, "loss_diff", base["max_loss_diff"],
+                  cur["max_loss_diff"], loss_tol)
+            check(name, "steps_lost", base["steps_lost"],
+                  cur["steps_lost"],
+                  math.ceil(base["steps_lost"] * threshold))
+        else:
+            check(name, "mttr_ticks", base["mttr_ticks"],
+                  cur["mttr_ticks"],
+                  max(math.ceil(base["mttr_ticks"] * threshold),
+                      base["mttr_ticks"] + 1))
+    return rows, failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--new", required=True)
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="allowed growth of mttr_ticks / steps_lost")
+    ap.add_argument("--loss-tol", type=float, default=1e-3,
+                    help="max per-step loss deviation vs the fault-free "
+                         "reference")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+
+    rows, failures = diff(baseline, new, args.threshold, args.loss_tol)
+    if not rows:
+        print("recovery_diff: no soak/* rows in the baseline -- an empty "
+              "comparison disables the gate, so this is an error; "
+              "regenerate the baseline with benchmarks/chaos_soak.py")
+        return 1
+    width = max(len(name) for name, *_ in rows)
+    print(f"{'row':<{width}}  {'metric':<11} {'base':>10} {'new':>10}  "
+          "verdict")
+    for name, metric, b, n, note in rows:
+        bs = f"{b:.3g}" if isinstance(b, float) else str(b)
+        ns = f"{n:.3g}" if isinstance(n, float) else str(n)
+        print(f"{name:<{width}}  {metric:<11} {bs:>10} {ns:>10}  {note}")
+    if failures:
+        print(f"\n{len(failures)} recovery metric(s) regressed vs baseline:"
+              f" {', '.join(failures)}")
+        return 1
+    print(f"\nall recovery metrics within {args.threshold:.2f}x of baseline"
+          f" (loss tol {args.loss_tol:g})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

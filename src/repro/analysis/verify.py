@@ -58,6 +58,9 @@ Violation codes (each maps to one invariant; mutation tests in
   ``stale-ownership``  spec.trees ownership slots disagree with the routed
                        windows (stripe table not re-striped after failover)
   ``depth-mismatch``   spec.depth disagrees with the recovered trees
+  ``sid-out-of-range`` a schedule id outside a runtime's precompiled entry
+                       table (``lax.switch`` would silently clamp it to a
+                       wrong failure-class branch)
   ==================== ====================================================
 
 Levels: ``"cheap"`` runs the single-pass wave scans plus the link-race
@@ -149,6 +152,22 @@ class SpecVerificationError(ValueError):
         if context:
             msg = f"{context}: {msg}"
         super().__init__(msg)
+
+
+def check_schedule_id(num_entries: int, schedule_id: int) -> Violation | None:
+    """The ``sid-out-of-range`` check: ``jax.lax.switch`` clamps its index
+    into ``[0, num_branches)``, so an out-of-range schedule id would
+    silently run the WRONG failure-class program instead of erroring.
+    Host-side callers (:class:`repro.dist.recovery.RecoveryController`)
+    gate every flip through this; the traced twin lives in
+    ``FaultAwareAllreduce.make_allreduce(debug=True)``."""
+    if 0 <= schedule_id < num_entries:
+        return None
+    return Violation(
+        "sid-out-of-range",
+        f"schedule id {schedule_id} outside the precompiled entry table "
+        f"[0, {num_entries}); lax.switch would clamp it to branch "
+        f"{min(max(schedule_id, 0), num_entries - 1)}")
 
 
 # ---------------------------------------------------------------------------

@@ -25,11 +25,22 @@ import json
 import os
 import shutil
 import tempfile
+import zlib
 
 import jax
 import numpy as np
 
 from ..optim.sharded import ShardedOptState
+
+
+def _file_crc32(path: str) -> int:
+    """CRC32 of a file's bytes (streamed): the per-shard content checksum
+    recorded in the manifest and verified on :func:`restore_sharded`."""
+    crc = 0
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            crc = zlib.crc32(chunk, crc)
+    return crc & 0xFFFFFFFF
 
 
 def _esc(k) -> str:
@@ -168,9 +179,12 @@ def save_sharded_checkpoint(ckpt_dir: str, step: int, params,
 
     def write(tmp):
         np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        checksums = {}
         for v in ranks:
-            np.savez(os.path.join(tmp, f"shard_{int(v):05d}.npz"),
-                     mu=mu[v], nu=nu[v], elem=elem[v])
+            name = f"shard_{int(v):05d}.npz"
+            np.savez(os.path.join(tmp, name), mu=mu[v], nu=nu[v],
+                     elem=elem[v])
+            checksums[name] = _file_crc32(os.path.join(tmp, name))
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump({"step": step, "keys": sorted(arrays),
                        "sharded": {
@@ -178,7 +192,8 @@ def save_sharded_checkpoint(ckpt_dir: str, step: int, params,
                            "kmax": int(elem.shape[1]),
                            "smax": int(elem.shape[2]),
                            "opt_step": int(np.asarray(
-                               jax.device_get(opt_state.step)))},
+                               jax.device_get(opt_state.step))),
+                           "checksums": checksums},
                        "extra": extra or {}}, f)
 
     return _commit_step_dir(ckpt_dir, step, write)
@@ -205,10 +220,21 @@ def restore_sharded(ckpt_dir: str, params_template, elem_map,
     geom = manifest["sharded"]
     size = int(geom["size"])
 
+    # torn/corrupt shards from a crashed host fail loudly BEFORE any
+    # state is assembled; checkpoints predating checksums load as before
+    checksums = geom.get("checksums", {})
     mu_flat = np.zeros(size, np.float32)
     nu_flat = np.zeros(size, np.float32)
     for v in range(int(geom["n"])):
-        shard = np.load(os.path.join(path, f"shard_{v:05d}.npz"))
+        name = f"shard_{v:05d}.npz"
+        shard_path = os.path.join(path, name)
+        if name in checksums and _file_crc32(shard_path) != checksums[name]:
+            raise ValueError(
+                f"sharded checkpoint corrupt: {shard_path} fails its "
+                f"manifest CRC32 (expected {checksums[name]:#010x}); the "
+                "shard was torn or altered after save -- restore an older "
+                "step or re-save from a healthy replica")
+        shard = np.load(shard_path)
         e = shard["elem"]
         mask = e >= 0
         mu_flat[e[mask]] = shard["mu"][mask]

@@ -245,7 +245,8 @@ class FaultAwareAllreduce:
 
     # -- execution ----------------------------------------------------------
 
-    def make_allreduce(self, quantize: bool = False, segments="auto"):
+    def make_allreduce(self, quantize: bool = False, segments="auto",
+                       debug: bool | None = None):
         """``allreduce(x, schedule_id)`` for use inside ``shard_map``: a
         ``jax.lax.switch`` over the precompiled programs.  Pass
         ``schedule_id`` as a traced ``jnp.int32`` scalar so every program
@@ -253,8 +254,21 @@ class FaultAwareAllreduce:
         (a Python int would constant-fold the switch away).  ``segments``
         streams chunks down the trees in that many pipeline segments
         (``"auto"``: backend-calibrated cost model) -- degraded and
-        rebuilt programs pipeline exactly like the healthy one."""
+        rebuilt programs pipeline exactly like the healthy one.
+
+        ``lax.switch`` clamps its index into range, so an out-of-range
+        ``schedule_id`` would silently run the WRONG failure-class
+        program.  ``debug=True`` (default from ``REPRO_DEBUG_SWITCH=1``)
+        adds the traced bounds guard -- the ``sid-out-of-range``
+        verifier invariant (:func:`repro.analysis.verify
+        .check_schedule_id`) enforced in-graph: a ``checkify.debug_check``
+        (a real error under ``checkify.checkify``) plus a NaN-poisoned
+        result so the violation is loud even in plain-jit runs where
+        debug_check is a no-op."""
         entries = self.entries
+        if debug is None:
+            import os
+            debug = os.environ.get("REPRO_DEBUG_SWITCH", "0") == "1"
 
         def branch(e: ScheduleEntry):
             if e.k == 0:
@@ -263,9 +277,25 @@ class FaultAwareAllreduce:
                                                     quantize, segments)
 
         branches = [branch(e) for e in entries]
+        num = len(branches)
 
         def allreduce(x, schedule_id):
-            return jax.lax.switch(schedule_id, branches, x)
+            out = jax.lax.switch(schedule_id, branches, x)
+            if debug:
+                from jax.experimental import checkify
+                ok = (schedule_id >= 0) & (schedule_id < num)
+                checkify.debug_check(
+                    ok, "sid-out-of-range: schedule id {sid} outside the "
+                        f"precompiled entry table [0, {num})",
+                    sid=schedule_id)
+                # no debug-callback here: host callbacks under manual
+                # sharding crash XLA; the NaN poison below is the signal
+                poison = jnp.where(ok, jnp.zeros((), out.dtype),
+                                   jnp.full((), jnp.nan, out.dtype)
+                                   if jnp.issubdtype(out.dtype, jnp.floating)
+                                   else jnp.zeros((), out.dtype))
+                out = out + poison
+            return out
 
         return allreduce
 

@@ -158,8 +158,20 @@ def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
                     grad_accum: int = 1, quantize: bool = False,
                     dp_torus_shape=None, fault_runtime=None,
                     segments="auto", engine: str = "pipelined",
-                    zero1: bool = False, codec=None):
+                    zero1: bool = False, codec=None,
+                    telemetry: bool = False):
     """Build the jittable train step.  See module docstring for ``mode``.
+
+    ``telemetry=True`` adds a ``"sync_dev"`` metric -- the in-graph
+    integrity check on the synchronized gradients that feeds
+    :class:`repro.dist.health.HealthMonitor`: for the replicating paths
+    (``psum_dp`` / dense ``edst``) the cross-replica
+    :func:`repro.dist.health.replication_divergence` of a payload
+    checksum (~0 when every replica holds identical sums), for the
+    ZeRO-1 path the scattered-domain
+    :func:`repro.dist.striped.rs_conservation_gap`.  A handful of scalar
+    collectives per step; corrupt-wire faults the schedule switch cannot
+    see surface here.
 
     ``engine`` (``mode="edst"``, ignored when a ``fault_runtime`` carries
     its own engine) selects the compiled allreduce form -- see
@@ -283,7 +295,10 @@ def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
 
     def synced_loss_and_grads(params, batch, schedule_id=None):
         if not manual_dp:
-            return local_loss_and_grads(params, batch)
+            loss, aux, grads = local_loss_and_grads(params, batch)
+            if telemetry:  # nothing synchronized; divergence vacuously 0
+                return loss, aux, grads, jnp.zeros((), jnp.float32)
+            return loss, aux, grads
 
         def local(p, b, sid):
             loss, aux, grads = local_loss_and_grads(p, b)
@@ -292,6 +307,7 @@ def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
             if mode == "psum_dp":
                 grads = jax.tree.map(
                     lambda g: jax.lax.psum(g, dp_arg) / ndp, grads)
+                flat = ravel_pytree(grads)[0] if telemetry else None
             else:
                 flat, unravel = ravel_pytree(grads)
                 if fault_sync is not None:
@@ -300,6 +316,10 @@ def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
                     flat = tree_allreduce(flat, tree_spec, quantize=quantize,
                                           segments=segments)
                 grads = unravel(flat / ndp)
+            if telemetry:
+                from .health import payload_checksum, replication_divergence
+                dev = replication_divergence(payload_checksum(flat), dp_arg)
+                return loss, aux, grads, dev
             return loss, aux, grads
 
         # Fully-manual shard_map: params replicate and the model axis is
@@ -311,9 +331,10 @@ def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
         # TP+FSDP meshes should use mode="gspmd" meanwhile.
         if schedule_id is None:
             schedule_id = jnp.int32(0)
+        outs = (P(), P(), P()) + ((P(),) if telemetry else ())
         return shard_map(local, mesh=mesh,
                          in_specs=(P(), P(dp_arg), P()),
-                         out_specs=(P(), P(), P()),
+                         out_specs=outs,
                          check_rep=False)(params, batch, schedule_id)
 
     if zero1:
@@ -341,6 +362,10 @@ def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
             new_flat = z_ag(new_op, sid, f32.shape)
             new_params = unravel(new_flat.astype(flat_p.dtype))
             om = {"grad_norm": gnorm, "lr": lr}
+            if telemetry:
+                from .striped import rs_conservation_gap
+                om["sync_dev"] = rs_conservation_gap(flat_g / ndp, owned_g,
+                                                     dp_arg)
             return loss, aux, new_params, new_mu[None], new_nu[None], om
 
         def _zstep(params, opt_state, batch, schedule_id=None):
@@ -366,9 +391,12 @@ def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
         return zfault_step
 
     def _step(params, opt_state, batch, schedule_id=None):
-        loss, aux, grads = synced_loss_and_grads(params, batch, schedule_id)
+        out = synced_loss_and_grads(params, batch, schedule_id)
+        loss, aux, grads = out[:3]
         new_params, new_state, om = opt.apply(params, grads, opt_state)
         metrics = {"loss": loss, **om, **aux}
+        if telemetry:
+            metrics["sync_dev"] = out[3]
         return new_params, new_state, metrics
 
     if fault_runtime is None:

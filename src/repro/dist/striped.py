@@ -214,3 +214,21 @@ def stripe_layout(spec: StripedCollectiveSpec, size: int, fractions=None):
     ``offsets`` / ``own_off`` / ``own_len`` describe exactly how
     :func:`tree_reduce_scatter` apportions ownership."""
     return striped_tables(spec, size, _normalize(fractions))
+
+
+def rs_conservation_gap(flat_reduced, owned, axis):
+    """In-graph integrity check for the scattered domain (the striped /
+    ZeRO-1 engines never replicate, so :func:`repro.dist.health
+    .replication_divergence` does not apply): after a reduce-scatter the
+    owner stripes across the fabric must partition the reduced vector,
+    so the global sum of owned elements must equal the global sum of the
+    (per-device mean-contribution) payload.  Returns the RELATIVE gap
+    ``|sum(owned) - sum(reduced)| / (|sum(reduced)| + 1)`` -- ~1e-7 of
+    float reassociation noise when healthy, O(magnitude) when a wire
+    corrupted, duplicated, or dropped a stripe.  Two scalar ``psum``\\ s;
+    call it inside the same ``shard_map`` as the reduce-scatter, passing
+    ``flat_reduced`` as this device's contribution ALREADY divided by
+    the fabric size (so its psum is the reduced vector's sum)."""
+    a = jax.lax.psum(jnp.sum(flat_reduced.astype(jnp.float32)), axis)
+    b = jax.lax.psum(jnp.sum(owned.astype(jnp.float32)), axis)
+    return jnp.abs(b - a) / (jnp.abs(a) + 1.0)

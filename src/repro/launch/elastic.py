@@ -33,9 +33,12 @@ import numpy as np
 from repro import configs
 from repro.ckpt import latest_step, restore
 from repro.core.collectives import CostModel
+from repro.core.edst_rt import max_edsts
 from repro.core.fault import FailureEvent
+from repro.core.graph import Graph
 from repro.dist import sharding as shd
-from repro.dist.fault import NoScheduleError
+from repro.dist.chaos import out_of_class_burst
+from repro.dist.fault import FaultAwareAllreduce, NoScheduleError
 from repro.dist.steps import (dp_axes_of, edst_spec_for_mesh,
                               fault_runtime_for_mesh)
 from repro.models.api import build
@@ -71,16 +74,62 @@ def rebuild_schedule(mesh, dp_torus_shape=None):
                               tuple(mesh.axis_names), dp_torus_shape)
 
 
-def failure_drill(runtime, n_events: int = 3, nbytes: float = 64 << 20,
-                  seed: int = 0, cost_model: CostModel | None = None) -> dict:
-    """Inject ``n_events`` seeded single-link failures into the fabric,
-    observe the runtime's recovery choice after each, and report effective
-    bandwidth: healthy -> degraded/rebuilt per event.
+def rescale_after_node_loss(runtime, event: FailureEvent,
+                            ) -> tuple:
+    """Elastic node-loss recovery: drop the dead nodes entirely, relabel
+    the surviving chips 0..n'-1, repack a maximal EDST set on the
+    residual fabric (Roskind-Tarjan), and build a fresh
+    :class:`repro.dist.fault.FaultAwareAllreduce` for it.  Returns
+    ``(new_runtime, relabel)`` where ``relabel[old_vertex] == new_vertex``
+    for every survivor -- the map drivers use to re-place per-rank state
+    (the same relabeling ``repro.core.fault`` applies internally).
+    Raises :class:`NoScheduleError` when the survivors are disconnected.
+    """
+    dead = event.dead_links(runtime.graph)
+    residual = runtime.graph.without_edges(dead)
+    alive = [v for v in range(runtime.graph.n) if v not in event.nodes]
+    relabel = {v: i for i, v in enumerate(alive)}
+    sub = Graph(len(alive),
+                {(relabel[u], relabel[v]) for u, v in residual.edges
+                 if u in relabel and v in relabel}, name="rescaled")
+    if not sub.is_connected():
+        raise NoScheduleError(
+            f"surviving fabric ({len(alive)} nodes) disconnected; "
+            "cannot rescale")
+    trees, _ = max_edsts(sub)
+    if not trees:
+        raise NoScheduleError("surviving fabric packs no spanning tree")
+    new_rt = FaultAwareAllreduce.build(sub, trees, runtime.axes,
+                                       engine=runtime.engine)
+    new_rt.history = runtime.history + [("rescaled", len(alive))]
+    return new_rt, relabel
 
+
+def failure_drill(runtime, n_events: int = 3, nbytes: float = 64 << 20,
+                  seed: int = 0, cost_model: CostModel | None = None,
+                  kinds=("link",)) -> dict:
+    """Inject ``n_events`` seeded failures into the fabric (cycling
+    through ``kinds``), observe the runtime's recovery choice after each,
+    and report effective bandwidth: healthy -> recovered per event.
+
+      * ``"link"``  -- a single-link kill: recovery is a precompiled
+        schedule-id flip (``on_failure``), falling back to a dynamic
+        repack only if no class survives;
+      * ``"burst"`` -- an out-of-class multi-link burst (grown with
+        :func:`repro.dist.chaos.out_of_class_burst` until no precompiled
+        class survives), forcing the ``with_rebuild`` Roskind-Tarjan
+        path;
+      * ``"node"``  -- a node loss: checkpointless here, exercising
+        :func:`rescale_after_node_loss` (relabel survivors + repack).
+        The rescaled fabric has fewer chips, so its ``bw_retained`` is
+        relative to a *different* healthy baseline and may exceed 1.
+
+    Events are independent -- each is injected into the healthy runtime.
     Each chosen schedule is validated with the packet-level simulator
     (``repro.core.collectives.simulate_allreduce``), so the drill runs on
     any host -- no devices needed; the shard_map execution path of the same
-    programs is covered by tests/test_fault_runtime_jax.py.
+    programs is covered by tests/test_fault_runtime_jax.py and the chaos
+    soak (benchmarks/chaos_soak.py).
     """
     cm = cost_model or CostModel()
     rng = np.random.RandomState(seed)
@@ -90,30 +139,61 @@ def failure_drill(runtime, n_events: int = 3, nbytes: float = 64 << 20,
     tree_links = sorted(set().union(
         *(ts.tree for ts in runtime.entries[0].sched.trees)))
     for i in range(n_events):
-        link = tree_links[rng.randint(len(tree_links))]
-        event = FailureEvent(links=frozenset({link}))
-        rec = {"event": i, "dead_link": list(link)}
-        try:
-            rt = runtime.on_failure(event)          # precompiled: id flip only
-            deg = runtime.on_failure(event, prefer="degraded")
-            rec.update({
-                "schedule": rt.entry.name, "schedule_id": rt.active,
-                "k": rt.entry.k,
-                "depth": rt.entry.depth,
-                "sim_ok": rt.verify_entry(rt.active),
-                "gbps": round(rt.effective_bandwidth(nbytes, rt.active, cm)
-                              / 1e9, 3),
-                "degraded_gbps": round(
-                    deg.effective_bandwidth(nbytes, deg.active, cm) / 1e9, 3),
-            })
-        except NoScheduleError:                     # dynamic repack
+        kind = kinds[i % len(kinds)]
+        if kind == "link":
+            link = tree_links[rng.randint(len(tree_links))]
+            event = FailureEvent(links=frozenset({link}))
+            rec = {"event": i, "kind": "link", "dead_link": list(link)}
+            try:
+                rt = runtime.on_failure(event)      # precompiled: id flip only
+                deg = runtime.on_failure(event, prefer="degraded")
+                rec.update({
+                    "schedule": rt.entry.name, "schedule_id": rt.active,
+                    "k": rt.entry.k,
+                    "depth": rt.entry.depth,
+                    "sim_ok": rt.verify_entry(rt.active),
+                    "gbps": round(rt.effective_bandwidth(nbytes, rt.active,
+                                                         cm) / 1e9, 3),
+                    "degraded_gbps": round(
+                        deg.effective_bandwidth(nbytes, deg.active, cm)
+                        / 1e9, 3),
+                })
+            except NoScheduleError:                 # dynamic repack
+                rt = runtime.with_rebuild(event)
+                rec.update({
+                    "schedule": "with_rebuild", "schedule_id": 0, "k": rt.k,
+                    "depth": rt.entry.depth,
+                    "sim_ok": rt.verify_entry(0),
+                    "gbps": round(rt.effective_bandwidth(nbytes, 0, cm)
+                                  / 1e9, 3),
+                })
+        elif kind == "burst":
+            burst = out_of_class_burst(runtime,
+                                       np.random.default_rng(seed + i))
+            event = FailureEvent(links=frozenset(burst))
+            assert not runtime.valid_ids(event)
             rt = runtime.with_rebuild(event)
-            rec.update({
-                "schedule": "with_rebuild", "schedule_id": 0, "k": rt.k,
-                "depth": rt.entry.depth,
-                "sim_ok": rt.verify_entry(0),
-                "gbps": round(rt.effective_bandwidth(nbytes, 0, cm) / 1e9, 3),
-            })
+            rec = {"event": i, "kind": "burst",
+                   "dead_links": sorted(list(e) for e in burst),
+                   "schedule": "with_rebuild", "schedule_id": 0, "k": rt.k,
+                   "depth": rt.entry.depth,
+                   "sim_ok": rt.verify_entry(0),
+                   "gbps": round(rt.effective_bandwidth(nbytes, 0, cm)
+                                 / 1e9, 3)}
+        elif kind == "node":
+            v = int(rng.randint(runtime.graph.n))
+            event = FailureEvent(nodes=frozenset({v}))
+            rt, relabel = rescale_after_node_loss(runtime, event)
+            rec = {"event": i, "kind": "node", "dead_node": v,
+                   "schedule": "rescale", "schedule_id": 0,
+                   "n_after": rt.graph.n, "k": rt.k,
+                   "depth": rt.entry.depth,
+                   "sim_ok": rt.verify_entry(0),
+                   "gbps": round(rt.effective_bandwidth(nbytes, 0, cm)
+                                 / 1e9, 3)}
+        else:
+            raise ValueError(f"unknown drill kind {kind!r} "
+                             "(not in ('link', 'burst', 'node'))")
         rec["bw_retained"] = round(rec["gbps"] * 1e9 / healthy_bw, 3)
         report["events"].append(rec)
     return report
@@ -131,6 +211,11 @@ def main(argv=None):
                          "report recovery + bandwidth as JSON")
     ap.add_argument("--events", type=int, default=3)
     ap.add_argument("--nbytes", type=int, default=64 << 20)
+    ap.add_argument("--drill-kinds", default="link,burst,node",
+                    help="comma list of failure kinds the drill cycles "
+                         "through: link (schedule flip), burst "
+                         "(out-of-class with_rebuild), node (elastic "
+                         "rescale)")
     args = ap.parse_args(argv)
 
     if args.failure_drill:
@@ -139,7 +224,8 @@ def main(argv=None):
                                          ("data", "model"),
                                          dp_torus_shape=dims)
         report = failure_drill(runtime, n_events=args.events,
-                               nbytes=args.nbytes)
+                               nbytes=args.nbytes,
+                               kinds=tuple(args.drill_kinds.split(",")))
         print(json.dumps(report, indent=2))
         return report
 

@@ -73,9 +73,21 @@ def main(argv=None):
                     help="ZeRO-1: reduce-scatter grads, owner-stripe "
                          "AdamW, allgather params (forces --sync edst "
                          "--edst-engine striped)")
+    ap.add_argument("--recover", action="store_true",
+                    help="close the fault loop (--sync edst): heartbeat-"
+                         "probe the fabric each step, feed step-time and "
+                         "gradient-checksum telemetry to the recovery "
+                         "controller, and recover in place -- retry on "
+                         "flaps, schedule-id flip on link kills, "
+                         "background rebuild + hot-swap on bursts; node "
+                         "loss checkpoints and exits (rescale by "
+                         "relaunching on the surviving mesh)")
     args = ap.parse_args(argv)
     if args.zero1:
         args.sync, args.edst_engine = "edst", "striped"
+    if args.recover and (args.sync != "edst" or args.zero1):
+        ap.error("--recover requires --sync edst without --zero1 (the "
+                 "zero1 recovery loop lives in benchmarks/chaos_soak.py)")
 
     cfg = configs.get(args.arch)
     if args.reduced:
@@ -104,11 +116,25 @@ def main(argv=None):
         else:
             opt_state = opt.init(params)
 
+        runtime = monitor = ctrl = None
+        if args.recover and dp_size(mesh) > 1:
+            from repro.dist.health import HealthMonitor
+            from repro.dist.recovery import RecoveryController
+            from repro.dist.steps import fault_runtime_for_mesh
+            runtime = fault_runtime_for_mesh(dims, names,
+                                             engine=args.edst_engine)
+            monitor = HealthMonitor(mesh, runtime)
+            ctrl = RecoveryController(runtime)
+
         step_fn = make_train_step(api, opt, mesh, mode=args.sync,
                                   quantize=args.quantize_grads,
                                   engine=args.edst_engine,
-                                  zero1=args.zero1)
-        jstep = jax.jit(step_fn, donate_argnums=(0, 1))
+                                  zero1=args.zero1,
+                                  fault_runtime=runtime,
+                                  telemetry=runtime is not None)
+        # rollback on a suspect step needs the pre-step buffers alive
+        donate = () if ctrl is not None else (0, 1)
+        jstep = jax.jit(step_fn, donate_argnums=donate)
 
         start = 0
         if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
@@ -127,10 +153,53 @@ def main(argv=None):
                                    seed=args.seed)
         t0 = time.time()
         losses = []
-        for step in range(start, args.steps):
+        step = start
+        while step < args.steps:
             batch = {"tokens": jnp.asarray(stream.batch(step))}
-            params, opt_state, metrics = jstep(params, opt_state, batch)
-            losses.append(float(metrics["loss"]))
+            if ctrl is not None:
+                snapshot = (params, opt_state)
+                t1 = time.time()
+                params, opt_state, metrics = jstep(
+                    params, opt_state, batch, jnp.int32(ctrl.schedule_id))
+                loss = float(metrics["loss"])   # blocks: dt is the real step
+                report = monitor.check(
+                    step, step_time=time.time() - t1,
+                    checksum_dev=float(metrics.get("sync_dev", 0.0)))
+                dec = ctrl.observe(report)
+                if dec.action == "rescale" and ctrl.state == "stalled":
+                    # a lost node needs a NEW process mesh: checkpoint and
+                    # hand off to repro.launch.elastic on the survivors
+                    params, opt_state = snapshot
+                    if args.ckpt_dir:
+                        _save(args, step, params, opt_state, zmap)
+                    print(f"[train] node loss at step {step} "
+                          f"({dec.detail.get('nodes')}); checkpoint saved "
+                          "-- relaunch on the surviving mesh "
+                          "(repro.launch.elastic)")
+                    break
+                if dec.action != "none":
+                    # the step ran over suspect fabric: discard and redo
+                    # after recovery (flip / hot-swap / backoff)
+                    params, opt_state = snapshot
+                    print(f"[train] step {step}: {dec.action} "
+                          f"(schedule {dec.schedule_id}) {dec.detail}")
+                    if dec.runtime_changed:
+                        from repro.dist.health import HealthMonitor
+                        step_fn = make_train_step(
+                            api, opt, mesh, mode=args.sync,
+                            quantize=args.quantize_grads,
+                            engine=args.edst_engine,
+                            fault_runtime=ctrl.runtime, telemetry=True)
+                        jstep = jax.jit(step_fn)
+                        monitor = HealthMonitor(mesh, ctrl.runtime,
+                                                straggler=monitor.straggler)
+                    if dec.backoff_s:
+                        time.sleep(dec.backoff_s)
+                    continue
+            else:
+                params, opt_state, metrics = jstep(params, opt_state, batch)
+                loss = float(metrics["loss"])
+            losses.append(loss)
             if step % args.log_every == 0 or step == args.steps - 1:
                 dt = time.time() - t0
                 print(f"[train] step {step:5d} loss {losses[-1]:.4f} "
@@ -138,6 +207,11 @@ def main(argv=None):
                       f"lr {float(metrics['lr']):.2e} ({dt:.1f}s)")
             if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
                 _save(args, step + 1, params, opt_state, zmap)
+            step += 1
+        if ctrl is not None and ctrl.journal:
+            print(f"[train] recovery journal ({len(ctrl.journal)} entries):")
+            for row in ctrl.journal_rows():
+                print(f"[train]   {json.dumps(row)}")
         if args.ckpt_dir:
             _save(args, args.steps, params, opt_state, zmap)
     print(f"[train] done: first loss {losses[0]:.4f} -> last {losses[-1]:.4f}")

@@ -1,0 +1,133 @@
+"""Chaos-injection units (:mod:`repro.dist.chaos`) plus the S4 property
+sweep: on every paper topology x {pipelined, striped} engine, EVERY
+precompiled failure-class entry passes the static verifier, and a
+scripted recovery session's journal replays to the controller's live
+(generation, schedule-id) state."""
+import numpy as np
+import pytest
+
+from repro.analysis.verify import (PAPER_TOPOLOGIES, _topology_case)
+from repro.core.edst_star import star_edsts
+from repro.core.fault import FailureEvent
+from repro.core.graph import canon
+from repro.dist.chaos import (ChaosEvent, ChaosInjector, make_trace,
+                              out_of_class_burst, trace_summary)
+from repro.dist.fault import FaultAwareAllreduce
+from repro.dist.health import HealthReport, compile_link_probe
+from repro.dist.recovery import (RecoveryController, RecoveryPolicy,
+                                 replay_journal)
+from repro.dist.steps import fault_runtime_for_mesh
+
+
+@pytest.fixture(scope="module")
+def rt():
+    return fault_runtime_for_mesh((16, 1), ("data", "model"),
+                                  dp_torus_shape=(4, 4))
+
+
+def test_make_trace_is_deterministic_and_ordered(rt):
+    kinds = ("flap", "kill", "burst", "straggler", "corruption", "node")
+    a = make_trace(rt, 48, seed=3, kinds=kinds)
+    b = make_trace(rt, 48, seed=3, kinds=kinds)
+    assert a == b
+    assert make_trace(rt, 48, seed=4, kinds=kinds) != a
+    assert tuple(e.kind for e in a) == kinds
+    ticks = [e.tick for e in a]
+    assert ticks == sorted(ticks) and ticks[0] >= 2
+    assert trace_summary(a)      # human-readable, never empty
+
+
+def test_make_trace_rejects_overfull_window(rt):
+    with pytest.raises(ValueError):
+        make_trace(rt, 6, kinds=("flap", "kill", "burst", "node"))
+
+
+def test_out_of_class_burst_kills_every_class_but_stays_connected(rt):
+    for seed in range(3):
+        burst = out_of_class_burst(rt, np.random.default_rng(seed))
+        assert rt.valid_ids(FailureEvent(links=frozenset(burst))) == []
+        assert rt.graph.without_edges(burst).is_connected()
+        # minimal-ish: it is a burst, not the whole fabric
+        assert len(burst) < len(rt.graph.edges) // 2
+
+
+def test_injector_masks_expires_and_clears(rt):
+    plan = compile_link_probe(rt)
+    edge = canon(*plan.links[0])
+    v = plan.links[-1][1]
+    trace = (ChaosEvent(tick=1, kind="flap", links=(edge,), duration=1),
+             ChaosEvent(tick=3, kind="kill", links=(edge,)),
+             ChaosEvent(tick=5, kind="corruption", duration=1,
+                        magnitude=1.0),
+             ChaosEvent(tick=7, kind="straggler", duration=2,
+                        magnitude=4.0),
+             ChaosEvent(tick=10, kind="node", node=v))
+    inj = ChaosInjector(trace)
+    slots = [i for i, l in enumerate(plan.links) if canon(*l) == edge]
+    nslots = [i for i, l in enumerate(plan.links) if v in l]
+
+    def mask():
+        return inj.fault_mask(plan)
+
+    inj.advance()                                  # tick 0: healthy
+    assert mask().all() and inj.time_dilation() == 1.0
+    assert inj.checksum_injection() == 0.0
+    inj.advance()                                  # tick 1: flap fires
+    assert not mask()[slots].any() and mask().sum() == len(mask()) - 2
+    inj.advance()                                  # tick 2: flap expired
+    assert mask().all()
+    inj.advance()                                  # tick 3: permanent kill
+    assert not mask()[slots].any()
+    inj.advance()                                  # tick 4: still dead
+    assert not mask()[slots].any()
+    inj.advance()                                  # tick 5: corruption
+    assert inj.checksum_injection() == 1.0
+    inj.advance()                                  # tick 6: expired
+    assert inj.checksum_injection() == 0.0
+    inj.advance()                                  # tick 7: straggler on
+    assert inj.time_dilation() == 4.0
+    inj.advance()                                  # tick 8: still on
+    assert inj.time_dilation() == 4.0
+    inj.advance()                                  # tick 9: expired
+    assert inj.time_dilation() == 1.0
+    inj.advance()                                  # tick 10: node loss
+    assert not mask()[nslots].any()
+    inj.clear_fabric_state()                       # post-rescale reset
+    assert mask().all()
+    assert inj.done
+
+
+def _scripted_kill_session(runtime):
+    """Confirm a tree-link kill through the controller; return it."""
+    plan = compile_link_probe(runtime)
+    ctrl = RecoveryController(
+        runtime, RecoveryPolicy(background_rebuild=False))
+    edge = next(iter(sorted(runtime.entries[0].sched.trees[0].tree)))
+    dead = frozenset({edge})
+    ok = np.array([canon(s, d) not in dead for s, d in plan.links])
+    for step in (0, 1):
+        ctrl.observe(HealthReport(step=step, links=plan.links, link_ok=ok))
+    return ctrl
+
+
+@pytest.mark.parametrize("label", PAPER_TOPOLOGIES)
+def test_every_failure_class_verifies_statically(label):
+    """S4: on each paper topology, both engines' full precompiled entry
+    tables (full + degraded + rebuilt per tree) pass the O(messages)
+    static verifier, and a scripted kill session's journal replays to
+    the same final schedule id the controller holds."""
+    sp, es = _topology_case(label)
+    res = star_edsts(sp, Es=es) if es is not None else star_edsts(sp)
+    g = sp.product()
+    for engine in ("pipelined", "striped"):
+        rt = FaultAwareAllreduce.build(g, res.trees, ("data",),
+                                       engine=engine)
+        assert len(rt.entries) == 2 * rt.k + 1
+        for i, e in enumerate(rt.entries):
+            if e.sched is None:        # k=0 stub on a k=1 fabric
+                continue
+            assert rt.verify_entry(i, static=True), (label, engine, e.name)
+        ctrl = _scripted_kill_session(rt)
+        assert ctrl.journal, (label, engine)
+        assert replay_journal(ctrl.journal) == (ctrl.generation,
+                                                ctrl.schedule_id)

@@ -1,0 +1,36 @@
+"""The acceptance soak: a seeded chaos trace with a flap, a link kill,
+an out-of-class burst, and a node loss runs through a REAL train loop
+(the chaos harness of ``benchmarks/chaos_soak.py``) on 16 fake devices
+-- zero unhandled exceptions, every committed loss equal to the
+fault-free ``psum_dp`` reference on the same batches, the node loss
+checkpointing and elastically rescaling onto the 8 survivors, and the
+journal covering every injected cause."""
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SOAK_CODE = f"""
+import sys, tempfile
+sys.path.insert(0, {REPO!r})
+""" + r"""
+from benchmarks.chaos_soak import run_soak
+
+rows = run_soak("dense", ("flap", "kill", "burst", "node"), 30,
+                ckpt_dir=tempfile.mkdtemp(prefix="soak_ck_"), verbose=True)
+t = rows["soak/dense/totals"]
+assert t["unhandled_exceptions"] == 0, t
+assert t["committed"] > 0 and t["max_loss_diff"] < 1e-3, t
+assert t["generations"] == 2, t          # burst hot-swap + node rescale
+assert t["n_final"] == 8, t              # rescaled onto the survivors
+causes = {row["cause"] for row in t["journal"]}
+assert {"link-flap", "link-kill", "link-burst", "node-loss"} <= causes, causes
+for kind in ("flap", "kill", "burst", "node"):
+    row = rows[f"soak/dense/{kind}"]
+    assert row["mttr_ticks"] <= 2 and row["events"] >= 1, (kind, row)
+print("CHAOS_SOAK_OK")
+"""
+
+
+def test_chaos_soak_closed_loop(subproc):
+    out = subproc(SOAK_CODE, 16)
+    assert "CHAOS_SOAK_OK" in out

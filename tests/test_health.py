@@ -1,0 +1,127 @@
+"""Detection-layer units for :mod:`repro.dist.health`: probe-plan
+construction (links from routing tables, ppermute-legal waves, slot
+tables), checksum sensitivity, straggler baselines, and the report
+classifications the recovery controller consumes.  All host-side -- the
+shard_map execution of the probe is exercised by the fast subprocess
+test in test_recovery.py and the chaos soak (test_chaos_soak_jax.py)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import canon
+from repro.dist.health import (HealthReport, StragglerDetector,
+                               _pack_probe_waves, compile_link_probe,
+                               payload_checksum, program_links,
+                               runtime_links)
+from repro.dist.steps import fault_runtime_for_mesh
+
+
+@pytest.fixture(scope="module")
+def rt():
+    return fault_runtime_for_mesh((16, 1), ("data", "model"),
+                                  dp_torus_shape=(4, 4))
+
+
+def test_program_links_read_from_routing_tables(rt):
+    """The probe set for one compiled program is exactly the directed
+    links its waves move payload over: every full-class tree edge shows
+    up (in some direction), and every link is a sane vertex pair."""
+    links = program_links(rt.entries[0].spec)
+    n = rt.graph.n
+    assert links == tuple(sorted(links))
+    for s, d in links:
+        assert 0 <= s < n and 0 <= d < n and s != d
+    covered = {canon(s, d) for s, d in links}
+    for ts in rt.entries[0].sched.trees:
+        assert ts.tree <= covered
+
+
+def test_runtime_links_union_covers_every_class(rt):
+    union = set(runtime_links(rt))
+    for e in rt.entries:
+        if e.sched is not None:
+            assert set(program_links(e.spec)) <= union
+
+
+def test_pack_probe_waves_are_ppermute_legal(rt):
+    links = runtime_links(rt)
+    waves = _pack_probe_waves(links)
+    seen = []
+    for wave in waves:
+        srcs = [s for s, _ in wave]
+        dsts = [d for _, d in wave]
+        assert len(set(srcs)) == len(srcs), "duplicate source in a wave"
+        assert len(set(dsts)) == len(dsts), "duplicate dest in a wave"
+        seen.extend(wave)
+    assert sorted(seen) == sorted(links)
+
+
+def test_compile_link_probe_slot_tables(rt):
+    plan = compile_link_probe(rt)
+    assert plan.num_links == len(plan.links)
+    slot = {l: i for i, l in enumerate(plan.links)}
+    for w, wave in enumerate(plan.waves):
+        src, slt = plan.recv_src[w], plan.recv_slot[w]
+        receivers = {d for _, d in wave}
+        for s, d in wave:
+            assert src[d] == s
+            assert slt[d] == slot[(s, d)]
+        for v in range(plan.n):
+            if v not in receivers:
+                assert src[v] == -1 and slt[v] == -1
+
+
+def test_payload_checksum_moves_on_any_single_flip():
+    x = jnp.asarray(np.random.RandomState(0).randn(7, 11), jnp.float32)
+    base = payload_checksum(x)
+    for idx in ((0, 0), (3, 5), (6, 10)):
+        y = x.at[idx].add(1e-3)
+        assert float(jnp.max(jnp.abs(payload_checksum(y) - base))) > 0
+
+
+def test_straggler_detector_flags_and_keeps_baseline():
+    det = StragglerDetector(window=8, ratio=2.5, min_samples=3)
+    for _ in range(5):
+        assert not det.observe(0.1)
+    assert det.observe(0.5)          # 5x the median
+    # flagged samples stay out of the baseline: a sustained straggler
+    # keeps flagging instead of normalizing itself
+    assert det.observe(0.5)
+    assert abs(det.baseline() - 0.1) < 1e-9
+    assert not det.observe(0.11)
+
+
+def test_straggler_detector_warms_up_quietly():
+    det = StragglerDetector(min_samples=5)
+    assert not det.observe(10.0)     # no baseline yet: never flags
+
+
+def _report(plan, dead_directed=(), step=0):
+    ok = np.array([l not in dead_directed for l in plan.links])
+    return HealthReport(step=step, links=plan.links, link_ok=ok)
+
+
+def test_report_classifies_edges_and_nodes(rt):
+    plan = compile_link_probe(rt)
+    s, d = plan.links[0]
+    # one dead direction is enough to fail the canonical edge
+    rep = _report(plan, {(s, d)})
+    assert not rep.all_links_ok
+    assert rep.failed_edges() == frozenset({canon(s, d)})
+    assert rep.node_suspects() == frozenset()
+    # every probed link of a vertex dead = the node-loss signature
+    v = plan.links[0][0]
+    dead = {l for l in plan.links if v in l}
+    rep = _report(plan, dead)
+    assert v in rep.node_suspects()
+    healthy = _report(plan)
+    assert healthy.all_links_ok and healthy.checksum_ok
+
+
+def test_report_checksum_tolerance():
+    rep = HealthReport(step=0, links=(), link_ok=np.ones(0, bool),
+                       checksum_dev=5e-4, checksum_tol=1e-3)
+    assert rep.checksum_ok
+    rep = HealthReport(step=0, links=(), link_ok=np.ones(0, bool),
+                       checksum_dev=5e-3, checksum_tol=1e-3)
+    assert not rep.checksum_ok
