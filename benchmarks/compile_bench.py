@@ -1,0 +1,183 @@
+"""Compile-time benchmark for the compositional star-product schedule
+compiler and the anytime wave-schedule search, writing the committed
+``BENCH_compile.json`` / ``BENCH_compile_quick.json`` artifacts that
+``benchmarks/compile_diff.py`` gates in CI.
+
+Two row families:
+
+  * ``compile`` -- composed-vs-flat wall-clock on large PolarStar
+    fabrics, one row per (fabric, engine).  Both paths receive the SAME
+    precomputed factor EDST sets (``factors_s`` is recorded but excluded
+    from both timings: the compositional compiler's premise is that
+    factor structure is packed once and cached across fabrics), then
+    each is timed in two stages -- schedule build (``*_sched_s``:
+    ``star_edsts``+``allreduce_schedule`` flat, composed-tree assembly
+    composed) and spec compile (``*_spec_s``: the greedy list schedule
+    over the flat message DAG vs ASAP earliest-wave placement).
+    ``speedup_spec`` is the spec-stage ratio the >=10x acceptance gate
+    reads (wave-program compilation, the stage the tentpole replaces);
+    ``speedup_total`` includes both stages.  ``composed_ok`` is the
+    static verifier's verdict on the composed program -- the speedup
+    only counts because the result is verifier-clean.
+  * ``search`` -- schedule-quality rows on the five paper topologies:
+    greedy vs searched wave counts and 64 MiB CostModel makespans per
+    engine.  Deterministic (seeded search), so the diff gate can require
+    search <= greedy exactly and a strict win somewhere.
+
+    python -m benchmarks.compile_bench --quick --out /tmp/compile.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+SCORE_NBYTES = 64 * 1024 * 1024
+
+
+def _compile_rows(fabrics, verify_level):
+    from repro.analysis.verify import verify_spec
+    from repro.core.collectives import (allreduce_schedule,
+                                        pipelined_spec_from_schedule,
+                                        striped_spec_from_schedule)
+    from repro.core.edst_star import star_edsts
+    from repro.core.product_schedule import (asap_pipelined_spec,
+                                             asap_striped_spec,
+                                             composed_allreduce_schedule,
+                                             factor_edsts_cached)
+    rows = []
+    for name, sp in fabrics:
+        n = sp.product().n
+        t0 = time.perf_counter()
+        Es = factor_edsts_cached(sp.gs)
+        En = factor_edsts_cached(sp.gn)
+        factors_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        comp_sched = composed_allreduce_schedule(sp, Es=Es, En=En)
+        comp_sched_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        res = star_edsts(sp, Es, En)
+        flat_sched = allreduce_schedule(n, res.trees)
+        flat_sched_s = time.perf_counter() - t0
+
+        for engine, comp_fn, flat_fn in (
+                ("pipelined", asap_pipelined_spec,
+                 pipelined_spec_from_schedule),
+                ("striped", asap_striped_spec,
+                 striped_spec_from_schedule)):
+            t0 = time.perf_counter()
+            cspec = comp_fn(comp_sched, ("data",), verify=False)
+            comp_spec_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            fspec = flat_fn(flat_sched, ("data",), verify=False)
+            flat_spec_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            ok = verify_spec(cspec, level=verify_level).ok
+            verify_s = time.perf_counter() - t0
+            rows.append({
+                "fabric": name, "n": n, "k": comp_sched.k,
+                "engine": engine,
+                "factors_s": round(factors_s, 3),
+                "flat_sched_s": round(flat_sched_s, 3),
+                "composed_sched_s": round(comp_sched_s, 3),
+                "flat_spec_s": round(flat_spec_s, 3),
+                "composed_spec_s": round(comp_spec_s, 3),
+                "speedup_spec": round(flat_spec_s / comp_spec_s, 2),
+                "speedup_total": round(
+                    (flat_sched_s + flat_spec_s)
+                    / (comp_sched_s + comp_spec_s), 2),
+                "flat_waves": len(fspec.waves),
+                "composed_waves": len(cspec.waves),
+                "composed_ok": bool(ok),
+                "verify_level": verify_level,
+                "verify_s": round(verify_s, 3),
+            })
+            print(f"compile/{name}/{engine}: n={n} "
+                  f"spec {flat_spec_s:.2f}s -> {comp_spec_s:.2f}s "
+                  f"({rows[-1]['speedup_spec']}x) "
+                  f"ok={ok}", flush=True)
+    return rows
+
+
+def _search_rows(labels):
+    from repro.analysis.verify import _schedule_for
+    from repro.core import schedule_search as ss
+    from repro.core.collectives import (CostModel,
+                                        pipelined_spec_from_schedule,
+                                        striped_spec_from_schedule)
+    cm = CostModel()
+    rows = []
+    for label in labels:
+        sched = _schedule_for(label)
+        gp = pipelined_spec_from_schedule(sched, ("data",), verify=False)
+        sp_ = ss.search_pipelined_spec(sched, ("data",), verify=False)
+        gs = striped_spec_from_schedule(sched, ("data",), verify=False)
+        st = ss.search_striped_spec(sched, ("data",), verify=False)
+
+        def _pipe_us(spec):
+            return cm.pipelined_allreduce(
+                SCORE_NBYTES, spec,
+                cm.best_segments(SCORE_NBYTES, spec)) * 1e6
+
+        for engine, greedy, searched, us in (
+                ("pipelined", gp, sp_, _pipe_us),
+                ("striped", gs, st,
+                 lambda s: cm.striped_allreduce(SCORE_NBYTES, s) * 1e6)):
+            rows.append({
+                "topology": label, "n": sched.n, "k": sched.k,
+                "engine": engine,
+                "greedy_waves": len(greedy.waves),
+                "search_waves": len(searched.waves),
+                "greedy_makespan_us": round(us(greedy), 2),
+                "search_makespan_us": round(us(searched), 2),
+            })
+            r = rows[-1]
+            print(f"search/{label}/{engine}: waves "
+                  f"{r['greedy_waves']} -> {r['search_waves']}, makespan "
+                  f"{r['greedy_makespan_us']} -> "
+                  f"{r['search_makespan_us']}us", flush=True)
+    return rows
+
+
+def run(quick: bool) -> dict:
+    from repro.analysis.verify import PAPER_TOPOLOGIES
+    from repro.core import topologies as topo
+    # >=1k-node PolarStar for the CI budget row; the full run adds the
+    # >=10k-node fabric the acceptance gate reads.
+    fabrics = [("polarstar_q11_qr29", topo.polarstar(11, "qr", 29))]
+    if not quick:
+        fabrics.append(("polarstar_q17_qr37", topo.polarstar(17, "qr", 37)))
+    t0 = time.perf_counter()
+    out = {
+        "meta": {"quick": quick, "score_nbytes": SCORE_NBYTES},
+        "compile": _compile_rows(fabrics, "full"),
+        "search": _search_rows(PAPER_TOPOLOGIES),
+    }
+    out["meta"]["wall_s"] = round(time.perf_counter() - t0, 1)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="the CI variant: the ~4k-node PolarStar compile "
+                         "row only (the full run adds the >=10k fabric)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default BENCH_compile_quick.json "
+                         "with --quick, else BENCH_compile.json)")
+    args = ap.parse_args()
+    out = args.out or ("BENCH_compile_quick.json" if args.quick
+                       else "BENCH_compile.json")
+    results = run(args.quick)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out} ({results['meta']['wall_s']}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

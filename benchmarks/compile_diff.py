@@ -1,0 +1,166 @@
+"""CI gate for the compile-time trajectory of the compositional
+star-product schedule compiler and the anytime wave-schedule search
+(``benchmarks/compile_bench.py`` JSON).
+
+Two kinds of checks:
+
+  * **Invariants on the new run alone** (machine-independent, always
+    enforced):
+
+      - every ``search`` row has ``search_waves <= greedy_waves`` (the
+        search only ever accepts strict improvements over the greedy
+        incumbent);
+      - at least one search row strictly wins -- fewer waves, or equal
+        waves at a strictly lower modelled makespan (the anytime-search
+        acceptance bar);
+      - every ``compile`` row is ``composed_ok`` (the composed program
+        passed the static verifier -- speed without legality is a
+        non-result);
+      - every striped ``compile`` row with ``n >= 10000`` has
+        ``speedup_spec >= 10`` (the compositional-compile acceptance
+        bar: wave-program compilation of a 10k+-node fabric at least
+        10x faster than the flat message-DAG list schedule);
+      - with ``--budget-s``, every compile row's composed path
+        (schedule + spec) fits the wall-clock budget (the CI >=1k-node
+        PolarStar row).
+
+  * **Diff vs a committed baseline** (``--baseline``): wave counts are
+    deterministic, so ``composed_waves`` and ``search_waves`` must not
+    exceed the baseline's AT ALL (schedule-quality regressions fail
+    exactly), while ``speedup_spec`` -- a same-process ratio, so host
+    speed cancels -- must not fall below ``baseline / --threshold``.
+
+    python -m benchmarks.compile_diff --baseline BENCH_compile_quick.json \
+        --new /tmp/compile_quick.json --threshold 1.5 --budget-s 120
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+_EPS = 1e-9
+
+
+def check_invariants(new: dict, budget_s: float | None) -> list:
+    """Machine-independent acceptance checks on one bench run; returns
+    failure strings."""
+    fails = []
+    strict_win = False
+    for r in new.get("search", ()):
+        name = f"search/{r['topology']}/{r['engine']}"
+        if r["search_waves"] > r["greedy_waves"]:
+            fails.append(f"{name}: search produced MORE waves than greedy "
+                         f"({r['search_waves']} > {r['greedy_waves']})")
+        if (r["search_waves"] < r["greedy_waves"]
+                or r["search_makespan_us"] < r["greedy_makespan_us"] - _EPS):
+            strict_win = True
+    if new.get("search") and not strict_win:
+        fails.append("search: no strict win over greedy on any paper "
+                     "fabric (fewer waves or lower makespan required "
+                     "somewhere)")
+    for r in new.get("compile", ()):
+        name = f"compile/{r['fabric']}/{r['engine']}"
+        if not r.get("composed_ok"):
+            fails.append(f"{name}: composed spec FAILED static "
+                         "verification")
+        if r["engine"] == "striped" and r["n"] >= 10000 \
+                and r["speedup_spec"] < 10:
+            fails.append(f"{name}: spec-stage speedup "
+                         f"{r['speedup_spec']}x < the 10x acceptance bar "
+                         f"at n={r['n']}")
+        if budget_s is not None:
+            spent = r["composed_sched_s"] + r["composed_spec_s"]
+            if spent > budget_s:
+                fails.append(f"{name}: composed compile took {spent:.1f}s "
+                             f"> the {budget_s:.0f}s budget")
+    return fails
+
+
+def _index(run: dict, family: str, keys: tuple) -> dict:
+    return {tuple(r[k] for k in keys): r for r in run.get(family, ())}
+
+
+def diff(baseline: dict, new: dict, threshold: float):
+    """(rows, regressions) vs the committed baseline; rows are
+    (name, metric, base, new) and regressions their names."""
+    rows, regressions = [], []
+    b_c = _index(baseline, "compile", ("fabric", "engine"))
+    n_c = _index(new, "compile", ("fabric", "engine"))
+    for key in sorted(b_c):
+        if key not in n_c:
+            continue
+        b, r = b_c[key], n_c[key]
+        name = f"compile/{key[0]}/{key[1]}"
+        rows.append((name, "composed_waves", b["composed_waves"],
+                     r["composed_waves"]))
+        if r["composed_waves"] > b["composed_waves"]:
+            regressions.append(name + " (waves)")
+        rows.append((name, "speedup_spec", b["speedup_spec"],
+                     r["speedup_spec"]))
+        if r["speedup_spec"] < b["speedup_spec"] / threshold:
+            regressions.append(name + " (speedup)")
+    b_s = _index(baseline, "search", ("topology", "engine"))
+    n_s = _index(new, "search", ("topology", "engine"))
+    for key in sorted(b_s):
+        if key not in n_s:
+            continue
+        b, r = b_s[key], n_s[key]
+        name = f"search/{key[0]}/{key[1]}"
+        rows.append((name, "search_waves", b["search_waves"],
+                     r["search_waves"]))
+        if r["search_waves"] > b["search_waves"]:
+            regressions.append(name + " (waves)")
+    return rows, regressions
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--new", required=True)
+    ap.add_argument("--baseline", default=None,
+                    help="committed bench JSON to diff against (omit to "
+                         "check the new run's invariants only)")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="tolerated speedup_spec shrink vs baseline "
+                         "(wave counts tolerate none)")
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="wall-clock budget for every composed compile "
+                         "row (schedule + spec stages)")
+    args = ap.parse_args()
+
+    with open(args.new) as f:
+        new = json.load(f)
+    fails = check_invariants(new, args.budget_s)
+
+    rows = []
+    if args.baseline is not None:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        rows, regressions = diff(baseline, new, args.threshold)
+        if not rows:
+            print("compile_diff: no comparable rows between baseline and "
+                  "new run (fabric/topology set changed without "
+                  "regenerating the baseline) -- an empty comparison "
+                  "disables the gate, so this is an error")
+            return 1
+        fails.extend(f"{name}: regressed vs baseline"
+                     for name in regressions)
+        width = max(len(f"{n} {m}") for n, m, *_ in rows)
+        for name, metric, b, r in rows:
+            mark = ("  <-- REGRESSION"
+                    if any(x.startswith(name) for x in regressions)
+                    and (metric != "speedup_spec"
+                         or r < b / args.threshold) else "")
+            print(f"{f'{name} {metric}':<{width}}  {b:>9} -> {r:<9}{mark}")
+
+    if fails:
+        print("\n" + "\n".join(f"FAIL: {f}" for f in fails))
+        return 1
+    print(f"\ncompile gate ok ({len(new.get('compile', ()))} compile rows, "
+          f"{len(new.get('search', ()))} search rows"
+          + (f", {len(rows)} diffed" if rows else "") + ")")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -49,6 +49,11 @@ SPEC_CLASSES = ("FusedAllreduceSpec", "PipelinedAllreduceSpec",
 SPEC_HOME = {
     "core/collectives.py": {"FusedAllreduceSpec", "PipelinedAllreduceSpec",
                             "StripedCollectiveSpec"},
+    "core/product_schedule.py": {"PipelinedAllreduceSpec",
+                                 "StripedCollectiveSpec"},
+    "core/schedule_search.py": {"FusedAllreduceSpec",
+                                "PipelinedAllreduceSpec",
+                                "StripedCollectiveSpec"},
     "dist/tree_allreduce.py": {"TreeAllreduceSpec"},
 }
 AXIS_FNS = {"ppermute": 1, "psum": 1, "pmean": 1, "pmax": 1, "pmin": 1,

@@ -1054,6 +1054,51 @@ def _simulate_case(label: str, sched, specs) -> list:
     return failures
 
 
+_STATS_NBYTES = 64 * 1024 * 1024
+
+
+def _stats_row(label: str, eng: str, spec, rep: VerifyReport) -> dict:
+    """One ``--stats`` table row: schedule-quality numbers for a verified
+    spec -- wave count, tree depth, and the :class:`CostModel` makespan of
+    a 64 MiB allreduce (the same score the anytime schedule search
+    minimizes, so greedy/search/composed runs are directly comparable in
+    CI logs)."""
+    from ..core.collectives import CostModel
+    cm = CostModel()
+    makespan = None
+    try:
+        if eng == "striped":
+            makespan = cm.striped_allreduce(_STATS_NBYTES, spec)
+        elif eng == "pipelined":
+            makespan = cm.pipelined_allreduce(
+                _STATS_NBYTES, spec, cm.best_segments(_STATS_NBYTES, spec))
+    except Exception:                  # cost model is advisory here
+        makespan = None
+    return {"topology": label, "engine": eng, "n": rep.n, "k": rep.k,
+            "depth": getattr(spec, "depth", None), "waves": rep.waves,
+            "messages": rep.messages, "makespan_us": makespan}
+
+
+def _print_stats(rows) -> None:
+    """Aligned waves/depth/makespan table (the ``--stats`` output)."""
+    heads = ("topology", "engine", "n", "k", "depth", "waves", "messages",
+             "makespan_us")
+    table = [heads]
+    for r in rows:
+        ms = r["makespan_us"]
+        table.append((r["topology"], r["engine"], str(r["n"]), str(r["k"]),
+                      "-" if r["depth"] is None else str(r["depth"]),
+                      str(r["waves"]), str(r["messages"]),
+                      "-" if ms is None else f"{ms * 1e6:.1f}"))
+    width = [max(len(row[c]) for row in table) for c in range(len(heads))]
+    print("\nschedule stats (CostModel, 64 MiB allreduce):")
+    for i, row in enumerate(table):
+        print("  " + "  ".join(cell.ljust(w)
+                               for cell, w in zip(row, width)).rstrip())
+        if i == 0:
+            print("  " + "  ".join("-" * w for w in width))
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(
         prog="python -m repro.analysis.verify",
@@ -1072,6 +1117,10 @@ def main(argv=None) -> int:
     p.add_argument("--simulate", action="store_true",
                    help="additionally replay the NumPy packet simulators "
                         "(the old benchmarks.wave_check dynamic gate)")
+    p.add_argument("--stats", action="store_true",
+                   help="print a waves/depth/makespan table per engine x "
+                        "topology after verification (CostModel at 64 MiB; "
+                        "the CI-log compile summary)")
     args = p.parse_args(argv)
 
     engines = (ENGINES if args.engines is None or args.all_engines
@@ -1084,6 +1133,7 @@ def main(argv=None) -> int:
 
     t0 = time.perf_counter()
     bad = 0
+    stats_rows = []
     for label in labels:
         sched = _schedule_for(label)
         specs = _compile_specs(sched, engines)
@@ -1098,12 +1148,16 @@ def main(argv=None) -> int:
                   f"({rep.messages} messages, {rep.waves} waves)"
                   + "".join(f"\n  - {v}" for v in rep.violations[:20]))
             bad += len(rep.violations)
+            if args.stats:
+                stats_rows.append(_stats_row(label, eng, spec, rep))
         if args.simulate:
             failures = _simulate_case(label, sched, specs)
             status = "ok" if not failures else "FAIL"
             print(f"simulate/{label}: {status}"
                   + "".join(f"\n  - {f}" for f in failures))
             bad += len(failures)
+    if args.stats and stats_rows:
+        _print_stats(stats_rows)
     dt = time.perf_counter() - t0
     if bad:
         print(f"\n{bad} invariant violation(s) in {dt:.2f}s")

@@ -154,7 +154,27 @@ class AllreduceSchedule:
         return out
 
 
+#: Wave-assembly strategies the spec compilers accept: ``"greedy"`` is the
+#: flat critical-path list schedule, ``"search"`` the seeded hillclimb of
+#: :mod:`repro.core.schedule_search` (never worse than greedy), and
+#: ``"composed"`` the near-linear compositional assembly of
+#: :mod:`repro.core.product_schedule`.
+SCHEDULES = ("greedy", "search", "composed")
+
+
 def allreduce_schedule(n: int, trees, roots=None) -> AllreduceSchedule:
+    """Build the k-tree schedule.  ``roots`` may be explicit root ids,
+    ``None`` (depth-minimizing tree centers via :func:`_best_root`), or
+    ``"search"`` -- the strict-improvement root search of
+    :mod:`repro.core.schedule_search`, which only replaces a center root
+    when a candidate is strictly shallower (so searched roots are never
+    deeper than :func:`_best_root`)."""
+    if isinstance(roots, str):
+        if roots != "search":
+            raise ValueError(f"roots={roots!r}: expected explicit roots, "
+                             "None, or 'search'")
+        from .schedule_search import search_roots
+        roots = search_roots(n, trees)
     roots = roots or [None] * len(trees)
     sched = AllreduceSchedule(n, [tree_schedule(n, t, r)
                                   for t, r in zip(trees, roots)])
@@ -306,17 +326,49 @@ def _sched_key(sched: AllreduceSchedule, axes: tuple) -> tuple:
 _FUSED_CACHE: dict = {}
 
 
+def _routed_spec(engine: str, sched, axes, verify, schedule: str,
+                 seed: int):
+    """Dispatch a ``schedule=`` strategy (:data:`SCHEDULES`) to its
+    compiler: ``"search"`` to :mod:`repro.core.schedule_search`,
+    ``"composed"`` to the ASAP assemblers of
+    :mod:`repro.core.product_schedule` (lazy imports -- both modules
+    import this one).  Returns ``None`` for ``"greedy"``: the caller
+    runs its own list-scheduled body."""
+    if schedule == "greedy":
+        return None
+    if schedule == "search":
+        from . import schedule_search as ss
+        fn = {"fused": ss.search_fused_spec,
+              "pipelined": ss.search_pipelined_spec,
+              "striped": ss.search_striped_spec}[engine]
+        return fn(sched, axes, verify, seed=seed)
+    if schedule == "composed":
+        from . import product_schedule as ps
+        fn = {"fused": ps.asap_fused_spec,
+              "pipelined": ps.asap_pipelined_spec,
+              "striped": ps.asap_striped_spec}[engine]
+        return fn(sched, axes, verify)
+    raise ValueError(f"schedule={schedule!r}: expected one of {SCHEDULES}")
+
+
 def fused_spec_from_schedule(sched: AllreduceSchedule,
                              axis_names,
-                             verify=None) -> FusedAllreduceSpec:
+                             verify=None, schedule: str = "greedy",
+                             seed: int = 0) -> FusedAllreduceSpec:
     """Compile an :class:`AllreduceSchedule` into the round-major
     :class:`FusedAllreduceSpec`.  Compiles are cached by (fabric, rooted
     trees, axes): repeated calls for the same topology return the *same*
     object, keeping jit caches stable.  Fresh compiles are statically
     verified per ``verify=`` (see :func:`verify_compiled_spec`) before
     entering the cache; cache hits re-verify only on an explicit truthy
-    ``verify``."""
+    ``verify``.  ``schedule`` picks the wave-assembly strategy
+    (:data:`SCHEDULES`); non-greedy strategies append their tag (and
+    ``seed``, for search) to the spec key, so each strategy keeps its own
+    stable spec identity."""
     axes = tuple(axis_names)
+    routed = _routed_spec("fused", sched, axes, verify, schedule, seed)
+    if routed is not None:
+        return routed
     key = _sched_key(sched, axes)
     hit = _FUSED_CACHE.get(key)
     if hit is not None:
@@ -500,7 +552,8 @@ def _message_dag(sched: AllreduceSchedule):
     return msgs, deps
 
 
-def _list_schedule(msgs, deps, kinds=None, op_of=None, verify=False):
+def _list_schedule(msgs, deps, kinds=None, op_of=None, verify=False,
+                   priority=None):
     """Greedy list scheduling of the message DAG into ppermute-legal
     waves (unique sources AND destinations per wave), critical-path
     height first.  A message becomes ready only once every dependency is
@@ -532,8 +585,12 @@ def _list_schedule(msgs, deps, kinds=None, op_of=None, verify=False):
     pending = set(ids)
     waves = []
     while pending:
-        ready = sorted((i for i in pending if deps[i] <= done),
-                       key=lambda i: (-height[i], msgs[i][0], msgs[i][2]))
+        if priority is None:
+            ready = sorted((i for i in pending if deps[i] <= done),
+                           key=lambda i: (-height[i], msgs[i][0], msgs[i][2]))
+        else:
+            ready = sorted((i for i in pending if deps[i] <= done),
+                           key=lambda i: (-height[i], priority[i]))
         if op_of is not None and ready:
             wave_op = op_of(msgs[ready[0]])
             ready = [i for i in ready if op_of(msgs[i]) == wave_op]
@@ -597,14 +654,20 @@ _PIPE_CACHE: dict = {}
 
 def pipelined_spec_from_schedule(sched: AllreduceSchedule,
                                  axis_names,
-                                 verify=None) -> PipelinedAllreduceSpec:
+                                 verify=None, schedule: str = "greedy",
+                                 seed: int = 0) -> PipelinedAllreduceSpec:
     """Compile an :class:`AllreduceSchedule` into the list-scheduled
     :class:`PipelinedAllreduceSpec`.  Cached by (fabric, rooted trees,
     axes) like :func:`fused_spec_from_schedule`: recompiles return the
     identical object, keeping jit caches stable.  Fresh compiles are
     statically verified per ``verify=`` before caching (full level also
-    self-checks the list scheduler's waves)."""
+    self-checks the list scheduler's waves).  ``schedule`` picks the
+    wave-assembly strategy (:data:`SCHEDULES`); non-greedy strategies
+    carry their own spec-key tag."""
     axes = tuple(axis_names)
+    routed = _routed_spec("pipelined", sched, axes, verify, schedule, seed)
+    if routed is not None:
+        return routed
     key = (*_sched_key(sched, axes), "pipelined")
     hit = _PIPE_CACHE.get(key)
     if hit is not None:
@@ -945,14 +1008,20 @@ _STRIPED_CACHE: dict = {}
 
 def striped_spec_from_schedule(sched: AllreduceSchedule,
                                axis_names,
-                               verify=None) -> StripedCollectiveSpec:
+                               verify=None, schedule: str = "greedy",
+                               seed: int = 0) -> StripedCollectiveSpec:
     """Compile an :class:`AllreduceSchedule` into the striped
     reduce-scatter / allgather :class:`StripedCollectiveSpec`.  Cached by
     (fabric, rooted trees, axes) like the other spec compilers:
     recompiles return the identical object, keeping jit caches stable.
     Fresh compiles are statically verified per ``verify=`` before
-    caching (full level also self-checks the list scheduler's waves)."""
+    caching (full level also self-checks the list scheduler's waves).
+    ``schedule`` picks the wave-assembly strategy (:data:`SCHEDULES`);
+    non-greedy strategies carry their own spec-key tag."""
     axes = tuple(axis_names)
+    routed = _routed_spec("striped", sched, axes, verify, schedule, seed)
+    if routed is not None:
+        return routed
     key = (*_sched_key(sched, axes), "striped")
     hit = _STRIPED_CACHE.get(key)
     if hit is not None:

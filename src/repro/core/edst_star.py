@@ -233,12 +233,27 @@ class StarEDSTs:
         return self
 
 
-def _treeify_all(sp: StarProduct, subgraphs) -> list[set]:
-    g = sp.product()
+def _treeify_all(sp: StarProduct, subgraphs, check: bool = True) -> list[set]:
+    """Remark 4.5.7 over every construction subgraph.  ``check=False`` is
+    the compositional fast path (:mod:`repro.core.product_schedule`): a
+    subgraph with exactly N-1 edges is an exact spanning tree by the
+    construction's own edge count (Construction A: (ns-1)*nn bundle edges
+    + (nn-1) supernode edges; Construction B: (ns-1) sink edges +
+    ns*(nn-1) supernode edges), so tree-ification is the identity and the
+    O(N) spanning-connected scan is skipped.  Subgraphs with more edges
+    still go through :func:`bfs_treeify`, whose own edge-count assert
+    catches a non-spanning input; neither branch touches
+    ``sp.product()``."""
+    n = sp.n
     out = []
     for sub in subgraphs:
-        assert edges_are_spanning_connected(g.n, sub), "subgraph not spanning"
-        out.append(bfs_treeify(g.n, sub))
+        if not check and len(sub) == n - 1:
+            out.append(set(sub))
+            continue
+        if check:
+            assert edges_are_spanning_connected(n, sub), \
+                "subgraph not spanning"
+        out.append(bfs_treeify(n, sub))
     return out
 
 
@@ -246,7 +261,8 @@ def _treeify_all(sp: StarProduct, subgraphs) -> list[set]:
 # Theorem-level constructions
 # ---------------------------------------------------------------------------
 
-def universal_edsts(sp: StarProduct, Es: EDSTSet, En: EDSTSet) -> StarEDSTs:
+def universal_edsts(sp: StarProduct, Es: EDSTSet, En: EDSTSet,
+                    verify: bool = True) -> StarEDSTs:
     """Thm 4.3.1: t1 + t2 - 2 trees, no conditions."""
     t1, t2 = Es.t, En.t
     x_rest, y_rest = Es.trees[1:], En.trees[1:]
@@ -256,11 +272,13 @@ def universal_edsts(sp: StarProduct, Es: EDSTSet, En: EDSTSet) -> StarEDSTs:
     v_list = list(range(t2 - 1))                            # arbitrary distinct
     trees = construct_A(sp, x_rest, En.trees[0], u_list)
     trees += construct_B(sp, xbar1, y_rest, v_list)
-    return StarEDSTs(sp, _treeify_all(sp, trees), "4.3.1",
-                     t1, t2, Es.r, En.r).verify()
+    res = StarEDSTs(sp, _treeify_all(sp, trees, check=verify), "4.3.1",
+                    t1, t2, Es.r, En.r)
+    return res.verify() if verify else res
 
 
-def maximal_edsts(sp: StarProduct, Es: EDSTSet, En: EDSTSet) -> StarEDSTs:
+def maximal_edsts(sp: StarProduct, Es: EDSTSet, En: EDSTSet,
+                  verify: bool = True) -> StarEDSTs:
     """Thms 4.5.1/4.5.2: t1 + t2 trees when r1 >= t1 and r2 >= t2."""
     t1, t2 = Es.t, En.t
     Es = repair_for_u(Es, t1)
@@ -277,11 +295,13 @@ def maximal_edsts(sp: StarProduct, Es: EDSTSet, En: EDSTSet) -> StarEDSTs:
     trees += construct_B(sp, xbar1, En.trees[1:], v_list)
     trees.append(construct_extra_nn(sp, xbar1, o, y1, En.nontree, set(un)))
     trees.append(construct_extra_ns(sp, xbar1, o_prime, y1, Es.nontree, set(us)))
-    return StarEDSTs(sp, _treeify_all(sp, trees), "4.5.1",
-                     t1, t2, Es.r, En.r).verify()
+    res = StarEDSTs(sp, _treeify_all(sp, trees, check=verify), "4.5.1",
+                    t1, t2, Es.r, En.r)
+    return res.verify() if verify else res
 
 
-def one_sided_edsts(sp: StarProduct, Es: EDSTSet, En: EDSTSet) -> StarEDSTs:
+def one_sided_edsts(sp: StarProduct, Es: EDSTSet, En: EDSTSet,
+                    verify: bool = True) -> StarEDSTs:
     """Thm 4.5.9: t1 + t2 - 1 trees when r1 >= t1 or r2 >= t2."""
     t1, t2 = Es.t, En.t
     es_repaired = None
@@ -319,8 +339,9 @@ def one_sided_edsts(sp: StarProduct, Es: EDSTSet, En: EDSTSet) -> StarEDSTs:
         trees.append(construct_extra_nn(sp, xbar1, o, y1, En.nontree, set(un)))
     else:
         raise ValueError("one-sided construction needs r1 >= t1 or r2 >= t2")
-    return StarEDSTs(sp, _treeify_all(sp, trees), "4.5.9",
-                     t1, t2, Es.r, En.r).verify()
+    res = StarEDSTs(sp, _treeify_all(sp, trees, check=verify), "4.5.9",
+                    t1, t2, Es.r, En.r)
+    return res.verify() if verify else res
 
 
 # ---------------------------------------------------------------------------
@@ -394,7 +415,8 @@ def check_property_461(sp: StarProduct, x_trees, v1: set, v2: set) -> bool:
     return True
 
 
-def property_461_edsts(sp: StarProduct, Es: EDSTSet, En: EDSTSet) -> StarEDSTs:
+def property_461_edsts(sp: StarProduct, Es: EDSTSet, En: EDSTSet,
+                       verify: bool = True) -> StarEDSTs:
     """Thm 4.6.2: t1 + t2 - 1 trees under Property 4.6.1."""
     t1, t2 = Es.t, En.t
     o = 0
@@ -452,8 +474,9 @@ def property_461_edsts(sp: StarProduct, Es: EDSTSet, En: EDSTSet) -> StarEDSTs:
         for sv in sinks:
             t.add(sp.cross_edge(x, xp, sv))
     trees.append(t)
-    return StarEDSTs(sp, _treeify_all(sp, trees), "4.6.2",
-                     t1, t2, Es.r, En.r).verify()
+    res = StarEDSTs(sp, _treeify_all(sp, trees, check=verify), "4.6.2",
+                    t1, t2, Es.r, En.r)
+    return res.verify() if verify else res
 
 
 # ---------------------------------------------------------------------------
@@ -461,36 +484,42 @@ def property_461_edsts(sp: StarProduct, Es: EDSTSet, En: EDSTSet) -> StarEDSTs:
 # ---------------------------------------------------------------------------
 
 def star_edsts(sp: StarProduct, Es: EDSTSet | None = None,
-               En: EDSTSet | None = None, strategy: str = "auto") -> StarEDSTs:
+               En: EDSTSet | None = None, strategy: str = "auto",
+               verify: bool = True) -> StarEDSTs:
+    """Theorem dispatch.  ``verify=False`` is the compositional fast path
+    (used by :mod:`repro.core.product_schedule`): the constructions'
+    guarantees are trusted -- no product-graph materialization, no
+    per-tree spanning/disjointness scan -- and the compiled wave program
+    is vetted by the static verifier instead."""
     Es = Es or edsts_for(sp.gs)
     En = En or edsts_for(sp.gn)
     t1, t2, r1, r2 = Es.t, En.t, Es.r, En.r
     if strategy == "universal":
-        return universal_edsts(sp, Es, En)
+        return universal_edsts(sp, Es, En, verify)
     if strategy == "maximal":
-        return maximal_edsts(sp, Es, En)
+        return maximal_edsts(sp, Es, En, verify)
     if strategy == "one-sided":
-        return one_sided_edsts(sp, Es, En)
+        return one_sided_edsts(sp, Es, En, verify)
     if strategy == "property461":
-        return property_461_edsts(sp, Es, En)
+        return property_461_edsts(sp, Es, En, verify)
     assert strategy == "auto", strategy
 
     if r1 >= t1 and r2 >= t2:
         try:
-            return maximal_edsts(sp, Es, En)
+            return maximal_edsts(sp, Es, En, verify)
         except ValueError:
             pass
     if r1 >= t1 or r2 >= t2:
         try:
-            return one_sided_edsts(sp, Es, En)
+            return one_sided_edsts(sp, Es, En, verify)
         except ValueError:
             pass
     try:
-        return property_461_edsts(sp, Es, En)
+        return property_461_edsts(sp, Es, En, verify)
     except ValueError:
         pass
     if t1 + t2 - 2 >= 1:
-        return universal_edsts(sp, Es, En)
+        return universal_edsts(sp, Es, En, verify)
     # degenerate fallback: a single BFS spanning tree of the product
     g = sp.product()
     return StarEDSTs(sp, [g.bfs_tree(0)], "bfs-fallback", t1, t2, r1, r2).verify()

@@ -41,6 +41,7 @@ class StarProduct:
             full[(v, u)] = _invert(p)
         self.bijections = full
         self._product = None
+        self._key = None
 
     # -- indexing -------------------------------------------------------------
     @property
@@ -60,6 +61,22 @@ class StarProduct:
 
     def coords(self, v: int) -> tuple[int, int]:
         return divmod(v, self.gn.n)
+
+    def cache_key(self) -> tuple:
+        """Stable value key of the product (factor edge sets + bijections):
+        two ``StarProduct`` objects with equal keys define the same product
+        graph vertex-for-vertex.  Computed once and memoized -- the
+        compositional schedule compiler (:mod:`repro.core.product_schedule`)
+        keys its composed-schedule and spec caches on it, so elastic
+        rescales and fault-runtime rebuilds that land on an
+        already-compiled fabric reuse the schedule instead of recompiling.
+        """
+        if self._key is None:
+            bij = tuple(sorted(
+                (e, p) for e, p in self.bijections.items() if e[0] < e[1]))
+            self._key = (self.ns, self.nn, frozenset(self.gs.edges),
+                         frozenset(self.gn.edges), bij)
+        return self._key
 
     def f(self, x: int, xp: int) -> tuple:
         """Bijection mapping supernode-x coordinates to supernode-xp coordinates."""

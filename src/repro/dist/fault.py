@@ -119,7 +119,8 @@ def _pad_stripes(owned, kmax: int, smax: int):
 
 
 def _entry(name: str, n: int, trees, axes,
-           engine: str = "pipelined") -> ScheduleEntry:
+           engine: str = "pipelined",
+           schedule: str = "greedy") -> ScheduleEntry:
     trees = [frozenset(canon(*e) for e in t) for t in trees]
     empty = (empty_striped_spec if engine == "striped"
              else empty_pipelined_spec)
@@ -129,7 +130,8 @@ def _entry(name: str, n: int, trees, axes,
         return ScheduleEntry(name, empty(n, axes), (), None)
     sched = allreduce_schedule(n, trees)
     fracs = tuple(rebalance_chunks(sched, {}))
-    return ScheduleEntry(name, compile_spec(sched, axes), fracs, sched)
+    return ScheduleEntry(name, compile_spec(sched, axes, schedule=schedule),
+                         fracs, sched)
 
 
 # ---------------------------------------------------------------------------
@@ -160,14 +162,19 @@ class FaultAwareAllreduce:
 
     @classmethod
     def build(cls, graph: Graph, trees, axis_names,
-              engine: str = "pipelined") -> "FaultAwareAllreduce":
+              engine: str = "pipelined",
+              schedule: str = "greedy") -> "FaultAwareAllreduce":
+        """``schedule`` applies to the healthy (id 0) entry only -- the
+        degraded/rebuilt classes are one-off fabrics where a search or
+        composed compile buys nothing over greedy."""
         if engine not in ("pipelined", "striped"):
             raise ValueError(
                 f"engine {engine!r} not in ('pipelined', 'striped')")
         trees = [frozenset(canon(*e) for e in t) for t in trees]
         axes = tuple(axis_names)
         k = len(trees)
-        entries = [_entry("full", graph.n, trees, axes, engine)]
+        entries = [_entry("full", graph.n, trees, axes, engine,
+                          schedule=schedule)]
         for j in range(k):
             keep = trees[:j] + trees[j + 1:]
             entries.append(_entry(f"degraded/tree{j}", graph.n, keep, axes,

@@ -103,14 +103,21 @@ def dp_fabric_for_mesh(mesh_shape, axis_names, dp_torus_shape=None):
 
 
 @functools.lru_cache(maxsize=None)
-def _edst_spec_cached(mesh_shape, axis_names, dp_torus_shape, engine):
+def _edst_spec_cached(mesh_shape, axis_names, dp_torus_shape, engine,
+                      schedule):
     sp, names = dp_fabric_for_mesh(mesh_shape, axis_names, dp_torus_shape)
+    if schedule == "composed":
+        # the compositional path never materializes the flat message DAG:
+        # factor EDSTs -> star trees -> ASAP wave placement, memoized on
+        # StarProduct.cache_key()
+        from ..core.product_schedule import composed_spec_for_star
+        return composed_spec_for_star(sp, names, engine=engine)
     sched = allreduce_schedule(sp.n, star_edsts(sp).trees)
     if engine == "fused":
-        return fused_spec_from_schedule(sched, names)
+        return fused_spec_from_schedule(sched, names, schedule=schedule)
     if engine == "striped":
-        return striped_spec_from_schedule(sched, names)
-    return pipelined_spec_from_schedule(sched, names)
+        return striped_spec_from_schedule(sched, names, schedule=schedule)
+    return pipelined_spec_from_schedule(sched, names, schedule=schedule)
 
 
 ENGINES = ("pipelined", "fused", "striped")
@@ -118,7 +125,7 @@ ENGINES = ("pipelined", "fused", "striped")
 
 def edst_spec_for_mesh(
         mesh_shape, axis_names, dp_torus_shape=None,
-        engine: str = "pipelined"
+        engine: str = "pipelined", schedule: str = "greedy"
 ) -> PipelinedAllreduceSpec | FusedAllreduceSpec | StripedCollectiveSpec:
     """EDST allreduce spec for the data-parallel fabric of a device mesh
     (see :func:`dp_fabric_for_mesh` for the fabric choice).  ``engine``
@@ -126,28 +133,38 @@ def edst_spec_for_mesh(
     scheduled segment-streaming wave program), ``"striped"`` (the
     reduce-scatter/allgather program of :mod:`repro.dist.striped`:
     stripe-sized wires for bandwidth-dominated fabrics) or ``"fused"``
-    (the round-aligned A/B baseline).  Specs are cached by (topology,
-    axes, engine): repeated calls -- every train-step build, every
-    elastic rescale probe -- return the same object, so jitted executors
-    taking the spec statically never retrace."""
+    (the round-aligned A/B baseline).  ``schedule`` picks the
+    wave-assembly strategy (``repro.core.collectives.SCHEDULES``):
+    ``"greedy"`` list scheduling, ``"search"`` the seeded hillclimb, or
+    ``"composed"`` the compositional product-schedule compiler (near-
+    linear compile on 10k+-node fabrics).  Specs are cached by
+    (topology, axes, engine, schedule): repeated calls -- every
+    train-step build, every elastic rescale probe -- return the same
+    object, so jitted executors taking the spec statically never
+    retrace."""
     if engine not in ENGINES:
         raise ValueError(f"engine {engine!r} not in {ENGINES}")
     return _edst_spec_cached(
         tuple(mesh_shape), tuple(axis_names),
-        None if dp_torus_shape is None else tuple(dp_torus_shape), engine)
+        None if dp_torus_shape is None else tuple(dp_torus_shape), engine,
+        schedule)
 
 
 def fault_runtime_for_mesh(mesh_shape, axis_names, dp_torus_shape=None,
-                           engine: str = "pipelined") -> FaultAwareAllreduce:
+                           engine: str = "pipelined",
+                           schedule: str = "greedy") -> FaultAwareAllreduce:
     """Elastic EDST runtime (precompiled degraded/rebuilt failure-class
     schedules) for the data-parallel fabric of a device mesh.  Pass the
     result to ``make_train_step(mode="edst", fault_runtime=...)`` and feed
     its schedule ids into the step's ``schedule_id`` argument.
     ``engine`` selects the compiled program form of every failure class
-    (striped classes re-stripe ownership over the surviving trees)."""
+    (striped classes re-stripe ownership over the surviving trees);
+    ``schedule`` the wave-assembly strategy of the healthy entry (failure
+    classes always compile greedy: their fabrics are degraded one-offs)."""
     sp, names = dp_fabric_for_mesh(mesh_shape, axis_names, dp_torus_shape)
     return FaultAwareAllreduce.build(sp.product(), star_edsts(sp).trees,
-                                     names, engine=engine)
+                                     names, engine=engine,
+                                     schedule=schedule)
 
 
 # ---------------------------------------------------------------------------

@@ -64,14 +64,31 @@ def reshard_checkpoint(api, opt, ckpt_dir: str, mesh):
     return state["p"], state["o"], step
 
 
-def rebuild_schedule(mesh, dp_torus_shape=None):
-    """Fresh EDST allreduce spec for the (possibly new) DP fabric, or None
-    when the mesh has no DP extent (single data shard: nothing to sync)."""
+def rebuild_schedule(mesh, dp_torus_shape=None, engine: str = "pipelined",
+                     schedule: str = "greedy"):
+    """EDST allreduce spec for the (possibly new) DP fabric, or None when
+    the mesh has no DP extent (single data shard: nothing to sync).
+    Rescales that land on an already-compiled fabric hit the spec caches
+    (``edst_spec_for_mesh`` memoizes per (topology, axes, engine,
+    schedule), the spec compilers per schedule key) and return the
+    IDENTICAL spec object -- a jitted executor taking the spec statically
+    never retraces.  ``schedule="composed"`` routes through the
+    compositional product-schedule compiler, whose caches key on
+    ``StarProduct.cache_key()``."""
     from repro.dist.steps import dp_size
     if dp_size(mesh) <= 1:
         return None
     return edst_spec_for_mesh(tuple(mesh.devices.shape),
-                              tuple(mesh.axis_names), dp_torus_shape)
+                              tuple(mesh.axis_names), dp_torus_shape,
+                              engine=engine, schedule=schedule)
+
+
+# Surviving-fabric runtimes, keyed by (n, surviving edge set, axes,
+# engine): a drill (or a flapping node) that lands on an already-seen
+# residual fabric reuses the runtime's entries -- every entry spec is the
+# identical object, so nothing downstream retraces -- instead of
+# re-running Roskind-Tarjan and 2k+1 spec compiles per event.
+_RESCALE_CACHE: dict = {}
 
 
 def rescale_after_node_loss(runtime, event: FailureEvent,
@@ -84,6 +101,11 @@ def rescale_after_node_loss(runtime, event: FailureEvent,
     for every survivor -- the map drivers use to re-place per-rank state
     (the same relabeling ``repro.core.fault`` applies internally).
     Raises :class:`NoScheduleError` when the survivors are disconnected.
+
+    Repeat rescales onto the same surviving fabric are served from
+    ``_RESCALE_CACHE``: the returned runtime shares the cached entries
+    (and jitted reshard gathers) object-for-object, with only the
+    history fresh.
     """
     dead = event.dead_links(runtime.graph)
     residual = runtime.graph.without_edges(dead)
@@ -96,11 +118,18 @@ def rescale_after_node_loss(runtime, event: FailureEvent,
         raise NoScheduleError(
             f"surviving fabric ({len(alive)} nodes) disconnected; "
             "cannot rescale")
-    trees, _ = max_edsts(sub)
-    if not trees:
-        raise NoScheduleError("surviving fabric packs no spanning tree")
-    new_rt = FaultAwareAllreduce.build(sub, trees, runtime.axes,
-                                       engine=runtime.engine)
+    key = (sub.n, frozenset(sub.edges), runtime.axes, runtime.engine)
+    base = _RESCALE_CACHE.get(key)
+    if base is None:
+        trees, _ = max_edsts(sub)
+        if not trees:
+            raise NoScheduleError("surviving fabric packs no spanning tree")
+        base = FaultAwareAllreduce.build(sub, trees, runtime.axes,
+                                         engine=runtime.engine)
+        _RESCALE_CACHE[key] = base
+    new_rt = FaultAwareAllreduce(base.graph, base.axes, base.entries,
+                                 engine=base.engine,
+                                 _reshard_cache=base._reshard_cache)
     new_rt.history = runtime.history + [("rescaled", len(alive))]
     return new_rt, relabel
 

@@ -1,0 +1,138 @@
+"""Composition correctness of the star-product schedule compiler
+(:mod:`repro.core.product_schedule`): composed trees are the flat
+``star_edsts`` trees exactly (same edges, same tree-center roots), the
+ASAP-assembled wave programs pass the FULL static verifier, replay
+bit-identically through the packet simulators (same per-link byte
+multiset as the flat pipelined program -- message conservation), never
+cost more than a bounded factor over the flat greedy wave counts, and
+recompile as the identical cached object (the no-retrace contract
+elastic rescales rely on)."""
+import numpy as np
+import pytest
+
+from repro.analysis.verify import _topology_case, verify_spec
+from repro.core.collectives import (allreduce_schedule,
+                                    pipelined_spec_from_schedule,
+                                    simulate_striped_program,
+                                    simulate_wave_program,
+                                    striped_spec_from_schedule)
+from repro.core.edst_star import star_edsts
+from repro.core.factor_graphs import complete, cycle
+from repro.core.product_schedule import (asap_fused_spec,
+                                         asap_pipelined_spec,
+                                         asap_striped_spec,
+                                         composed_allreduce_schedule,
+                                         composed_spec_for_star,
+                                         composed_star_trees)
+from repro.core.star import cartesian
+
+AXES = ("data",)
+# C4 x K3 (the doc example) + the asymmetric paper fabrics; torus4x4 /
+# hyperx4x4 are cartesian squares already covered by C4xK3's shape.
+CASE_LABELS = ("C4xK3", "slimfly_q5", "polarstar_er3_qr5",
+               "bundlefly_q4_a5")
+
+_CASES: dict = {}
+
+
+def _case(label):
+    """(sp, Es, flat_sched, comp_sched), memoized per module run."""
+    if label not in _CASES:
+        if label == "C4xK3":
+            sp, es = cartesian(cycle(4), complete(3)), None
+        else:
+            sp, es = _topology_case(label)
+        n = sp.product().n
+        res = star_edsts(sp, Es=es) if es is not None else star_edsts(sp)
+        flat = allreduce_schedule(n, res.trees)
+        comp = composed_allreduce_schedule(sp, Es=es)
+        _CASES[label] = (sp, es, flat, comp)
+    return _CASES[label]
+
+
+@pytest.mark.parametrize("label", CASE_LABELS)
+def test_composed_trees_and_roots_match_flat(label):
+    """composed_star_trees assembles the SAME edge sets star_edsts
+    proves, and the composed schedule picks the same tree-center
+    roots -- so composed and flat compile the same paper construction."""
+    sp, es, flat, comp = _case(label)
+    composed = composed_star_trees(sp, Es=es)
+    flat_trees = star_edsts(sp, Es=es) if es is not None else star_edsts(sp)
+    assert [frozenset(t) for t in composed.trees] \
+        == [frozenset(t) for t in flat_trees.trees]
+    assert [ts.root for ts in comp.trees] == [ts.root for ts in flat.trees]
+    assert [ts.tree for ts in comp.trees] == [ts.tree for ts in flat.trees]
+    assert comp.depth == flat.depth
+
+
+@pytest.mark.parametrize("label", CASE_LABELS)
+@pytest.mark.parametrize("engine", ("pipelined", "striped", "fused"))
+def test_composed_spec_full_verify_clean(label, engine):
+    _, _, _, comp = _case(label)
+    spec = {"pipelined": asap_pipelined_spec, "striped": asap_striped_spec,
+            "fused": asap_fused_spec}[engine](comp, AXES, verify=False)
+    rep = verify_spec(spec, level="full")
+    assert rep.ok, rep.summary()
+
+
+@pytest.mark.parametrize("label", CASE_LABELS)
+def test_composed_replay_bit_identical_conservation(label):
+    """The composed programs move the SAME per-link byte multiset as the
+    flat pipelined program (the trees are identical, so conservation is
+    exact, not approximate) and both simulators reproduce the allreduce
+    sums."""
+    sp, _, flat, comp = _case(label)
+    n = sp.product().n
+    rng = np.random.RandomState(7)
+    vals = rng.randn(n, 8 * comp.k + 3)
+    cp = asap_pipelined_spec(comp, AXES, verify=False)
+    cs = asap_striped_spec(comp, AXES, verify=False)
+    fp = pipelined_spec_from_schedule(flat, AXES, verify=False)
+    simc = simulate_wave_program(cp, vals, 1)
+    simf = simulate_wave_program(fp, vals, 1)
+    assert simc.ok and simf.ok
+    assert simc.per_link_bytes == simf.per_link_bytes
+    sims = simulate_striped_program(cs, vals)
+    assert sims.ok and sims.stripes_ok
+
+
+@pytest.mark.parametrize("label", CASE_LABELS)
+def test_composed_wave_counts_bounded(label):
+    """ASAP assembly must not regress schedule quality: composed
+    pipelined waves equal the flat greedy count exactly, composed
+    striped waves stay within ~15% (the measured envelope is ~5%)."""
+    _, _, flat, comp = _case(label)
+    cp = asap_pipelined_spec(comp, AXES, verify=False)
+    fp = pipelined_spec_from_schedule(flat, AXES, verify=False)
+    assert len(cp.waves) == len(fp.waves)
+    cs = asap_striped_spec(comp, AXES, verify=False)
+    fs = striped_spec_from_schedule(flat, AXES, verify=False)
+    assert len(cs.waves) <= int(len(fs.waves) * 1.15) + 1
+
+
+def test_composed_compile_is_cached_identity():
+    """Recompiling the same fabric returns the IDENTICAL objects at every
+    layer (schedule and spec) -- the no-retrace contract: jitted
+    executors keyed on the spec never recompile across elastic events
+    that land on an already-seen fabric."""
+    sp = cartesian(cycle(4), complete(3))
+    a = composed_allreduce_schedule(sp)
+    b = composed_allreduce_schedule(sp)
+    assert a is b
+    assert asap_pipelined_spec(a, AXES) is asap_pipelined_spec(b, AXES)
+    assert asap_striped_spec(a, AXES) is asap_striped_spec(b, AXES)
+    assert composed_spec_for_star(sp, AXES, engine="striped") \
+        is asap_striped_spec(a, AXES)
+
+
+def test_schedule_kwarg_routes_to_composed():
+    """``striped_spec_from_schedule(..., schedule="composed")`` on a
+    composed schedule returns the composed-cache object, and an unknown
+    strategy raises."""
+    sp = cartesian(cycle(4), complete(3))
+    sched = composed_allreduce_schedule(sp)
+    via_kwarg = striped_spec_from_schedule(sched, AXES, schedule="composed")
+    assert via_kwarg is asap_striped_spec(sched, AXES)
+    assert via_kwarg.key[-1] == "composed"
+    with pytest.raises(ValueError, match="schedule="):
+        striped_spec_from_schedule(sched, AXES, schedule="annealed")

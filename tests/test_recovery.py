@@ -242,3 +242,41 @@ def test_debug_switch_poisons_out_of_range_sid():
     device print); the default path keeps the clamp semantics."""
     out = run_with_devices(DEBUG_SID_CODE, 4)
     assert "DEBUG_SID_OK" in out
+
+
+def test_rescale_onto_same_fabric_reuses_cached_specs(rt):
+    """Elastic spec-cache reuse (the no-retrace contract): two rescales
+    landing on the SAME surviving fabric share every compiled entry spec
+    object -- jitted executors keyed on the spec never recompile -- while
+    history stays per-runtime."""
+    from repro.core.fault import FailureEvent
+    ev = FailureEvent(nodes=frozenset({3}))
+    a, rel_a = rescale_after_node_loss(rt, ev)
+    b, rel_b = rescale_after_node_loss(rt, ev)
+    assert rel_a == rel_b
+    assert b is not a                       # fresh runtime per event...
+    assert b.entries is a.entries           # ...sharing the cached entries
+    assert all(ea.spec is eb.spec
+               for ea, eb in zip(a.entries, b.entries))
+    assert a.history == b.history == rt.history + [("rescaled",
+                                                    rt.graph.n - 1)]
+
+
+def test_edst_spec_for_mesh_schedule_strategies_cached():
+    """``edst_spec_for_mesh`` returns the identical object per
+    (mesh, engine, schedule) across calls for EVERY strategy, and the
+    strategies compile distinct specs (distinct cache keys)."""
+    from repro.dist.steps import edst_spec_for_mesh
+    args = ((16, 1), ("data", "model"))
+    specs = {}
+    for schedule in ("greedy", "search", "composed"):
+        s1 = edst_spec_for_mesh(*args, dp_torus_shape=(4, 4),
+                                engine="striped", schedule=schedule)
+        s2 = edst_spec_for_mesh(*args, dp_torus_shape=(4, 4),
+                                engine="striped", schedule=schedule)
+        assert s1 is s2
+        specs[schedule] = s1
+    assert len({s.key for s in specs.values()}) == 3
+    assert specs["composed"].key[-1] == "composed"
+    assert specs["search"].key[-2:] == ("search", 0)
+    assert len(specs["search"].waves) <= len(specs["greedy"].waves)
