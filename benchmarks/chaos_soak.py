@@ -83,6 +83,7 @@ from repro.dist.recovery import (RecoveryController,  # noqa: E402
 from repro.dist.steps import (dp_size, fault_runtime_for_mesh,  # noqa: E402
                               make_train_step)
 from repro.optim import AdamW, ShardedAdamW, cosine_schedule  # noqa: E402
+from repro.telemetry import metrics as tmetrics  # noqa: E402
 
 MESH_ARGS = ((16, 1), ("data", "model"))
 TORUS = (4, 4)
@@ -132,6 +133,10 @@ def run_soak(config: str, kinds, n_ticks: int, seed: int = 0,
     """One soaked training run; returns the bench rows for ``config``."""
     zero1 = config == "zero1"
     engine = "pipelined" if config == "dense" else "striped"
+    # baseline for the journal <-> metrics reconciliation: everything the
+    # process-wide transition counter gains during THIS soak must match
+    # the controller's journal exactly
+    m0 = tmetrics.counter_values("edst_recovery_transitions_total")
     opt = AdamW(cosine_schedule(1e-2, 5, max(n_ticks, 20)))
     api = QuadAPI()
     cm = CostModel()
@@ -273,6 +278,15 @@ def run_soak(config: str, kinds, n_ticks: int, seed: int = 0,
     final_bw = ctrl.runtime.effective_bandwidth(
         NBYTES, ctrl.runtime.active, cm)
 
+    m1 = tmetrics.counter_values("edst_recovery_transitions_total")
+    observed = {k: m1[k] - m0.get(k, 0.0) for k in m1
+                if m1[k] != m0.get(k, 0.0)}
+    expected: dict = {}
+    for e in ctrl.journal:
+        key = (("action", str(e.action)), ("cause", str(e.cause)))
+        expected[key] = expected.get(key, 0.0) + 1.0
+    metrics_reconciled = observed == expected
+
     rows = {}
     by_kind: dict = {}
     for e in ctrl.journal:
@@ -290,6 +304,7 @@ def run_soak(config: str, kinds, n_ticks: int, seed: int = 0,
         "final_loss_diff": loss_diffs[-1] if loss_diffs else 0.0,
         "max_gnorm_diff": max(gnorm_diffs, default=0.0),
         "unhandled_exceptions": unhandled,
+        "metrics_reconciled": metrics_reconciled,
         "bw_retained": round(final_bw / healthy_bw, 3),
         "generations": ctrl.generation,
         "n_final": ctrl.runtime.graph.n,
@@ -341,7 +356,8 @@ def main(argv=None) -> int:
                         ckpt_dir=os.path.join(ckpt_dir, config))
         results.update(rows)
         totals = rows[f"soak/{config}/totals"]
-        if totals["unhandled_exceptions"] or totals["max_loss_diff"] > 1e-3:
+        if (totals["unhandled_exceptions"] or totals["max_loss_diff"] > 1e-3
+                or not totals["metrics_reconciled"]):
             failed += 1
 
     with open(args.out, "w") as f:

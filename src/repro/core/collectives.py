@@ -1344,6 +1344,38 @@ def simulate_allreduce(sched: AllreduceSchedule, values: np.ndarray,
 # alpha-beta cost model (paper Sec. 1.1: collective bandwidth)
 # ---------------------------------------------------------------------------
 
+def wave_wire_bytes(spec, nbytes: float, itemsize: int = 4,
+                    fractions=None) -> tuple:
+    """Per-wave wire bytes of any compiled spec, in program order.
+
+    The chunk engines (pipelined / fused / per-tree) ship one padded
+    ``mrow``-element row per hop, so every wave carries the same wire;
+    the striped engine's waves carry their bound stripe-window widths
+    (:func:`striped_tables`).  This is the static per-wave twin of the
+    makespan methods below -- the telemetry layer renders it as span
+    widths and the timing harness diffs it against measurement."""
+    k = spec.k
+    if k == 0:
+        return ()
+    elems = max(1, -(-int(nbytes) // itemsize))
+    if isinstance(spec, StripedCollectiveSpec):
+        fr = None if fractions is None else tuple(fractions)
+        bound = striped_tables(spec, elems, fr)
+        return tuple(int(w.wire) * itemsize for w in bound.waves)
+    fracs = tuple(fractions) if fractions is not None else (1.0 / k,) * k
+    row_bytes = max(chunk_sizes(elems, fracs)) * itemsize
+    if isinstance(spec, PipelinedAllreduceSpec):
+        nwaves = len(spec.waves)
+    elif isinstance(spec, FusedAllreduceSpec):
+        nwaves = len(spec.reduce_rounds) + len(spec.bcast_rounds)
+    else:
+        # the per-tree form lives in repro.dist.tree_allreduce (a
+        # JAX-importing module), so it is duck-typed on its rounds
+        nwaves = sum(len(t.reduce_rounds) + len(t.bcast_rounds)
+                     for t in spec.trees)
+    return (row_bytes,) * nwaves
+
+
 @dataclass
 class CostModel:
     link_bw: float = 50e9      # bytes/s per link (ICI default)
@@ -1455,6 +1487,21 @@ class CostModel:
         bound = striped_tables(spec, elems)
         return sum(self.alpha + w.wire * itemsize / self.link_bw
                    for w in bound.waves)
+
+    def wave_times(self, spec, nbytes: float, itemsize: int = 4,
+                   fractions=None, segments: int = 1) -> tuple:
+        """Predicted seconds per wave, in program order: ``alpha +
+        wire/bw`` over :func:`wave_wire_bytes`.  The per-wave
+        decomposition of the makespan methods above -- what the
+        telemetry trace renders as predicted span durations and the
+        wave-by-wave timing harness (``repro.telemetry.timing``) diffs
+        against measurement.  ``segments`` > 1 (chunk engines only)
+        repeats the wave sequence once per segment at ``1/S`` of the row
+        bytes, the serialized-host reading of the streamed program."""
+        wires = wave_wire_bytes(spec, nbytes, itemsize, fractions)
+        if segments > 1 and not isinstance(spec, StripedCollectiveSpec):
+            wires = tuple(-(-w // segments) for w in wires) * segments
+        return tuple(self.alpha + w / self.link_bw for w in wires)
 
     def best_segments(self, nbytes: float, spec, smax: int = 64) -> int:
         """The segment count minimizing :meth:`pipelined_allreduce`

@@ -40,6 +40,7 @@ import numpy as np
 
 from ..core.fault import FailureEvent
 from ..core.graph import canon
+from ..telemetry import metrics as _metrics
 from .health import LinkProbeSpec, runtime_links
 
 KINDS = ("flap", "kill", "burst", "straggler", "corruption", "node")
@@ -216,6 +217,10 @@ class ChaosInjector:
                 self._corrupt_until = self.tick + ev.duration
                 self._corrupt_mag = ev.magnitude
         self.fired.extend(fired)
+        for ev in fired:
+            _metrics.counter("edst_chaos_events_total",
+                             "injected chaos events by kind"
+                             ).inc(kind=ev.kind)
         return fired
 
     def fault_mask(self, plan: LinkProbeSpec) -> np.ndarray:

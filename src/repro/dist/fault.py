@@ -47,6 +47,7 @@ from ..core.collectives import (AllreduceSchedule, CostModel,
 from ..core.edst_rt import max_edsts
 from ..core.fault import FailureEvent, rebalance_chunks
 from ..core.graph import Graph, canon
+from ..telemetry import metrics as _metrics
 from .tree_allreduce import (chunk_sizes,  # noqa: F401  (re-exported)
                              fused_tree_allreduce, pipelined_tree_allreduce)
 
@@ -229,6 +230,9 @@ class FaultAwareAllreduce:
             pick = max(valid, key=lambda i: (self.entries[i].k,
                                              -self.entries[i].depth, -i))
         hist = self.history + [(self.entries[pick].name, self.entries[pick].k)]
+        _metrics.counter("edst_schedule_flips_total",
+                         "precompiled schedule-id flips on failure"
+                         ).inc(prefer=prefer)
         return replace(self, active=pick, history=hist)
 
     def with_rebuild(self, event: FailureEvent) -> "FaultAwareAllreduce":
@@ -248,6 +252,8 @@ class FaultAwareAllreduce:
         rebuilt = FaultAwareAllreduce.build(residual, trees, self.axes,
                                            engine=self.engine)
         rebuilt.history = self.history + [("with_rebuild", len(trees))]
+        _metrics.counter("edst_rebuilds_total",
+                         "dynamic Roskind-Tarjan schedule rebuilds").inc()
         return rebuilt
 
     # -- execution ----------------------------------------------------------

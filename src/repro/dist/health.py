@@ -49,6 +49,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..analysis.verify import engine_of
 from ..core.graph import canon
+from ..telemetry import metrics as _metrics
 from .compat import shard_map
 
 
@@ -312,8 +313,27 @@ class HealthMonitor:
         bitmap = self.probe(fault_mask)
         slow = (step_time is not None
                 and self.straggler.observe(float(step_time)))
-        return HealthReport(step=step, links=self.plan.links,
-                            link_ok=np.asarray(bitmap) > 0.5,
-                            checksum_dev=float(checksum_dev),
-                            checksum_tol=self.checksum_tol,
-                            step_time=step_time, straggler=slow)
+        report = HealthReport(step=step, links=self.plan.links,
+                              link_ok=np.asarray(bitmap) > 0.5,
+                              checksum_dev=float(checksum_dev),
+                              checksum_tol=self.checksum_tol,
+                              step_time=step_time, straggler=slow)
+        n_failed = int((~report.link_ok).sum())
+        _metrics.counter("edst_health_checks_total",
+                         "heartbeat/checksum/straggler detection ticks"
+                         ).inc()
+        if n_failed:
+            _metrics.counter("edst_probe_failures_total",
+                             "directed links that failed a heartbeat probe"
+                             ).inc(n_failed)
+        _metrics.gauge("edst_failed_links",
+                       "directed links failing the latest probe"
+                       ).set(n_failed)
+        if not report.checksum_ok:
+            _metrics.counter("edst_checksum_failures_total",
+                             "payload checksum divergences past tolerance"
+                             ).inc()
+        if slow:
+            _metrics.counter("edst_straggler_flags_total",
+                             "steps flagged as stragglers").inc()
+        return report

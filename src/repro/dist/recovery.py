@@ -43,15 +43,25 @@ schedule ids, steps degraded, wall-clock MTTR).  The journal is
 *replayable*: :func:`replay_journal` recomputes the final (generation,
 schedule-id) pair from the entries alone, so a recovery log can be
 audited offline against the runtime state it claims to have produced.
+With ``journal_path=`` every entry is ALSO appended to a JSONL file
+(monotonic ``seq`` numbers, one flush per entry) so post-mortems survive
+the process; ``replay_journal`` accepts the file form directly, and the
+same choke point increments
+``edst_recovery_transitions_total{cause,action}`` in
+:mod:`repro.telemetry.metrics` -- journal and counters reconcile by
+construction.
 """
 from __future__ import annotations
 
+import json
+import os
 import threading
 import time
 from dataclasses import dataclass, field
 
 from ..analysis.verify import check_schedule_id
 from ..core.fault import FailureEvent
+from ..telemetry import metrics as _metrics
 from .fault import NoScheduleError
 
 CAUSES = ("link-flap", "link-kill", "link-burst", "payload-corruption",
@@ -94,12 +104,37 @@ class JournalEntry:
                 "mttr_s": self.mttr_s, "detail": dict(self.detail)}
 
 
+def load_journal(path) -> list:
+    """Parse a JSONL journal file back into :class:`JournalEntry` rows,
+    asserting the ``seq`` numbers are strictly monotonic (a torn or
+    re-ordered file is a corrupt post-mortem and raises)."""
+    entries, last_seq = [], -1
+    with open(path) as f:
+        for ln, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            row = json.loads(line)
+            seq = row.pop("seq", None)
+            if not isinstance(seq, int) or seq <= last_seq:
+                raise ValueError(f"journal {path} line {ln + 1}: seq "
+                                 f"{seq!r} not monotonic (last {last_seq})")
+            last_seq = seq
+            entries.append(JournalEntry(**row))
+    return entries
+
+
 def replay_journal(journal) -> tuple:
     """Re-derive the final ``(generation, schedule_id)`` from journal
     entries alone -- the offline audit the soak tests assert against the
-    live controller state."""
+    live controller state.  Accepts a list of :class:`JournalEntry` (or
+    plain ``to_row()`` dicts) or the path of a JSONL journal file."""
+    if isinstance(journal, (str, os.PathLike)):
+        journal = load_journal(journal)
     gen, sid = 0, 0
     for e in journal:
+        if isinstance(e, dict):
+            e = JournalEntry(**{k: v for k, v in e.items() if k != "seq"})
         if e.action in ("flip", "hot-swap", "rescale"):
             gen, sid = e.generation, e.to_schedule
     return gen, sid
@@ -135,7 +170,8 @@ class RecoveryController:
     unhandled exception."""
 
     def __init__(self, runtime, policy: RecoveryPolicy | None = None,
-                 on_checkpoint=None, on_rescale=None, clock=time.monotonic):
+                 on_checkpoint=None, on_rescale=None, clock=time.monotonic,
+                 journal_path=None):
         self.runtime = runtime
         self.policy = policy or RecoveryPolicy()
         self.on_checkpoint = on_checkpoint
@@ -143,6 +179,8 @@ class RecoveryController:
         self.clock = clock
         self.generation = 0
         self.journal: list = []
+        self.journal_path = journal_path   # JSONL sink (None: memory only)
+        self._seq = 0
         self.state = "healthy"   # healthy | suspect | degraded | rebuilding
         #                          | stalled
         self._suspects: dict = {}     # edge -> (first_tick, first_time, count)
@@ -203,6 +241,14 @@ class RecoveryController:
                          steps_degraded=steps_degraded, mttr_s=mttr_s,
                          detail=detail or {})
         self.journal.append(e)
+        _metrics.counter(
+            "edst_recovery_transitions_total",
+            "recovery journal transitions by cause and action"
+        ).inc(cause=cause, action=action)
+        if self.journal_path is not None:
+            with open(self.journal_path, "a") as f:
+                f.write(json.dumps({"seq": self._seq, **e.to_row()}) + "\n")
+            self._seq += 1
         return e
 
     # -- links: flap / kill / burst -----------------------------------------

@@ -51,7 +51,7 @@ from ..core.collectives import (FusedAllreduceSpec, PipelinedAllreduceSpec,
                                 StripedCollectiveSpec, allreduce_schedule,
                                 fused_spec_from_schedule,
                                 pipelined_spec_from_schedule,
-                                striped_spec_from_schedule)
+                                striped_spec_from_schedule, wave_wire_bytes)
 from ..core.edst_star import star_edsts
 from . import sharding as shd
 from .compat import shard_map
@@ -171,6 +171,25 @@ def fault_runtime_for_mesh(mesh_shape, axis_names, dp_torus_shape=None,
 # train step factory
 # ---------------------------------------------------------------------------
 
+_WIRE_TABLE_CACHE: dict = {}
+
+
+def _entry_wire_table(entries, nbytes: int, itemsize: int):
+    """Per-entry total wire bytes of a fault runtime's precompiled
+    schedules as an (E,) f32 table, memoized on (spec keys, payload) so
+    traced closures index it without rebuilding per trace."""
+    key = (tuple((e.spec.key, e.fractions) for e in entries),
+           int(nbytes), int(itemsize))
+    hit = _WIRE_TABLE_CACHE.get(key)
+    if hit is None:
+        hit = np.asarray(
+            [float(sum(wave_wire_bytes(e.spec, nbytes, itemsize,
+                                       e.fractions or None)))
+             for e in entries], np.float32)
+        _WIRE_TABLE_CACHE[key] = hit
+    return hit
+
+
 def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
                     grad_accum: int = 1, quantize: bool = False,
                     dp_torus_shape=None, fault_runtime=None,
@@ -179,16 +198,28 @@ def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
                     telemetry: bool = False):
     """Build the jittable train step.  See module docstring for ``mode``.
 
-    ``telemetry=True`` adds a ``"sync_dev"`` metric -- the in-graph
-    integrity check on the synchronized gradients that feeds
-    :class:`repro.dist.health.HealthMonitor`: for the replicating paths
-    (``psum_dp`` / dense ``edst``) the cross-replica
-    :func:`repro.dist.health.replication_divergence` of a payload
-    checksum (~0 when every replica holds identical sums), for the
-    ZeRO-1 path the scattered-domain
-    :func:`repro.dist.striped.rs_conservation_gap`.  A handful of scalar
-    collectives per step; corrupt-wire faults the schedule switch cannot
-    see surface here.
+    ``telemetry=True`` adds a structured in-graph metrics dict (all
+    scalars, no extra collectives beyond the checksum):
+
+      * ``"sync_dev"`` -- the integrity check on the synchronized
+        gradients that feeds :class:`repro.dist.health.HealthMonitor`:
+        for the replicating paths (``psum_dp`` / dense ``edst``) the
+        cross-replica :func:`repro.dist.health.replication_divergence`
+        of a payload checksum (~0 when every replica holds identical
+        sums), for the ZeRO-1 path the scattered-domain
+        :func:`repro.dist.striped.rs_conservation_gap`;
+      * ``"sync_grad_norm"`` -- global L2 norm of the synchronized
+        gradients (the ZeRO-1 path already emits ``"grad_norm"``);
+      * ``"sync_schedule_id"`` -- the traced schedule id the sync ran on
+        (0 without a fault runtime);
+      * ``"sync_wire_bytes"`` -- static per-step wire bytes of the EDST
+        sync program (``repro.core.collectives.wave_wire_bytes`` summed;
+        with a fault runtime, a precompiled per-entry table indexed by
+        the traced id -- so flips move the gauge without a retrace;
+        0 for ``psum_dp``/``gspmd``, whose wire XLA owns).
+
+    Every key is present in every mode (zero-valued where it does not
+    apply), so downstream consumers never branch on dict shape.
 
     ``engine`` (``mode="edst"``, ignored when a ``fault_runtime`` carries
     its own engine) selects the compiled allreduce form -- see
@@ -280,6 +311,24 @@ def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
     # alongside "Involuntary full rematerialization" warnings).
     del fsdp
 
+    def _tree_grad_norm(grads):
+        return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                            for g in jax.tree.leaves(grads)))
+
+    def _wire_gauge(nbytes, itemsize, sid):
+        """Static wire bytes of the sync program this step runs.  With a
+        fault runtime the per-entry totals are a compile-time table the
+        traced schedule id indexes, so schedule flips move the gauge
+        without retracing."""
+        if fault_runtime is not None:
+            vals = _entry_wire_table(fault_runtime.entries, nbytes, itemsize)
+            table = jnp.asarray(vals, jnp.float32)
+            return table[jnp.clip(sid, 0, len(fault_runtime.entries) - 1)]
+        if tree_spec is not None:
+            return jnp.float32(sum(wave_wire_bytes(tree_spec, nbytes,
+                                                   itemsize)))
+        return jnp.float32(0.0)
+
     def loss_of(p, b):
         loss, metrics = api.loss_fn(p, b)
         return loss, metrics
@@ -314,7 +363,12 @@ def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
         if not manual_dp:
             loss, aux, grads = local_loss_and_grads(params, batch)
             if telemetry:  # nothing synchronized; divergence vacuously 0
-                return loss, aux, grads, jnp.zeros((), jnp.float32)
+                zero = jnp.zeros((), jnp.float32)
+                return loss, aux, grads, {
+                    "sync_dev": zero,
+                    "sync_grad_norm": _tree_grad_norm(grads),
+                    "sync_schedule_id": jnp.int32(0),
+                    "sync_wire_bytes": zero}
             return loss, aux, grads
 
         def local(p, b, sid):
@@ -336,7 +390,14 @@ def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
             if telemetry:
                 from .health import payload_checksum, replication_divergence
                 dev = replication_divergence(payload_checksum(flat), dp_arg)
-                return loss, aux, grads, dev
+                itemsize = jnp.dtype(flat.dtype).itemsize
+                wire = (_wire_gauge(flat.size * itemsize, itemsize, sid)
+                        if mode == "edst" else jnp.float32(0.0))
+                return loss, aux, grads, {
+                    "sync_dev": dev,
+                    "sync_grad_norm": _tree_grad_norm(grads),
+                    "sync_schedule_id": jnp.asarray(sid, jnp.int32),
+                    "sync_wire_bytes": wire}
             return loss, aux, grads
 
         # Fully-manual shard_map: params replicate and the model axis is
@@ -383,6 +444,11 @@ def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
                 from .striped import rs_conservation_gap
                 om["sync_dev"] = rs_conservation_gap(flat_g / ndp, owned_g,
                                                      dp_arg)
+                itemsize = jnp.dtype(flat_g.dtype).itemsize
+                om["sync_grad_norm"] = gnorm
+                om["sync_schedule_id"] = jnp.asarray(sid, jnp.int32)
+                om["sync_wire_bytes"] = _wire_gauge(
+                    flat_g.size * itemsize, itemsize, sid)
             return loss, aux, new_params, new_mu[None], new_nu[None], om
 
         def _zstep(params, opt_state, batch, schedule_id=None):
@@ -413,7 +479,7 @@ def make_train_step(api, opt, mesh, mode: str = "gspmd", fsdp: bool = True,
         new_params, new_state, om = opt.apply(params, grads, opt_state)
         metrics = {"loss": loss, **om, **aux}
         if telemetry:
-            metrics["sync_dev"] = out[3]
+            metrics.update(out[3])
         return new_params, new_state, metrics
 
     if fault_runtime is None:

@@ -46,7 +46,8 @@ import jax.numpy as jnp
 from ..core.collectives import (StripedCollectiveSpec, REDUCE,
                                 striped_tables)
 from .tree_allreduce import (_FLOATS, _REDUCE_WIRE, _axis_arg, _gather,
-                             _rows_of, _rows_out, _send, resolve_codec)
+                             _note_trace, _rows_of, _rows_out, _scope,
+                             _send, resolve_codec)
 
 
 def _normalize(fractions):
@@ -67,39 +68,47 @@ def _rows_in(flat, sizes, mrow):
     return jnp.stack(_rows_of(flat, len(sizes), sizes, mrow))
 
 
-def _run_waves(state, waves, idx, axis, rs_wire, ag_wire):
-    """Execute bound striped waves on the (k, mrow) state.
+def _run_wave(state, bw, idx, axis, rs_wire, ag_wire):
+    """Execute ONE bound striped wave on the (k, mrow) state.
 
     Non-senders compute a (discarded) payload and non-receivers carry a
     zero-length mask, so the whole wave is branch-free; ``ppermute``
     hands devices nobody sent to a zero payload, which the circular mask
-    drops anyway."""
+    drops anyway.  Split out of :func:`_run_waves` so the instrumented
+    wave-by-wave executor (:mod:`repro.telemetry.timing`) can jit and
+    time exactly the production wave body."""
     k, mrow = state.shape
     pos = jnp.arange(mrow)
     rows_iota = jnp.arange(k)
-    for bw in waves:
-        src_tree = _gather(bw.send_tree, idx)
-        src_off = _gather(bw.send_off, idx)
-        row = jax.lax.dynamic_index_in_dim(state, src_tree, 0,
-                                           keepdims=False)
-        payload = jnp.roll(row, -src_off)[:bw.wire]
-        recv = _send(payload, axis, bw.perm,
-                     rs_wire if bw.op == REDUCE else ag_wire)
-        roff = _gather(bw.recv_off, idx)
-        rlen = _gather(bw.recv_len, idx)
-        rtree = _gather(bw.recv_tree, idx)
-        full = recv if bw.wire == mrow \
-            else jnp.pad(recv, (0, mrow - bw.wire))
-        rolled = jnp.roll(full, roff)
-        mask = jnp.roll(pos < rlen, roff)      # circular window, len 0 = none
-        onehot = rows_iota == rtree
-        if bw.op == REDUCE:
-            contrib = jnp.where(mask, rolled, jnp.zeros((), rolled.dtype))
-            state = state + onehot.astype(state.dtype)[:, None] \
-                * contrib[None, :]
-        else:
-            sel = onehot[:, None] & mask[None, :]
-            state = jnp.where(sel, rolled[None, :], state)
+    src_tree = _gather(bw.send_tree, idx)
+    src_off = _gather(bw.send_off, idx)
+    row = jax.lax.dynamic_index_in_dim(state, src_tree, 0,
+                                       keepdims=False)
+    payload = jnp.roll(row, -src_off)[:bw.wire]
+    recv = _send(payload, axis, bw.perm,
+                 rs_wire if bw.op == REDUCE else ag_wire)
+    roff = _gather(bw.recv_off, idx)
+    rlen = _gather(bw.recv_len, idx)
+    rtree = _gather(bw.recv_tree, idx)
+    full = recv if bw.wire == mrow \
+        else jnp.pad(recv, (0, mrow - bw.wire))
+    rolled = jnp.roll(full, roff)
+    mask = jnp.roll(pos < rlen, roff)      # circular window, len 0 = none
+    onehot = rows_iota == rtree
+    if bw.op == REDUCE:
+        contrib = jnp.where(mask, rolled, jnp.zeros((), rolled.dtype))
+        return state + onehot.astype(state.dtype)[:, None] \
+            * contrib[None, :]
+    sel = onehot[:, None] & mask[None, :]
+    return jnp.where(sel, rolled[None, :], state)
+
+
+def _run_waves(state, waves, idx, axis, rs_wire, ag_wire):
+    """Execute bound striped waves on the (k, mrow) state."""
+    for w, bw in enumerate(waves):
+        op = "rs" if bw.op == REDUCE else "ag"
+        with _scope(f"edst/t*/w{w}/{op}"):
+            state = _run_wave(state, bw, idx, axis, rs_wire, ag_wire)
     return state
 
 
@@ -199,6 +208,9 @@ def striped_allreduce(x, spec: StripedCollectiveSpec, quantize: bool = False,
     if fractions is not None and len(fractions) != spec.k:
         raise ValueError(f"{len(fractions)} fractions for k={spec.k} trees; "
                          "spec and striping must come from the same schedule")
+    _note_trace("striped", spec, x,
+                codec=(resolve_codec(codec) if quantize else None),
+                fractions=fractions)
     shape, dtype = x.shape, x.dtype
     axis, idx, flat, bound = _prep(x, spec, fractions)
     rs_wire, ag_wire = _wires(quantize, codec, dtype)

@@ -47,6 +47,8 @@ than the wire bytes it saves).
 """
 from __future__ import annotations
 
+import os
+from contextlib import nullcontext
 from dataclasses import dataclass
 
 import jax
@@ -56,10 +58,11 @@ import numpy as np
 from ..core.collectives import (CostModel, FusedAllreduceSpec,
                                 PipelinedAllreduceSpec,
                                 StripedCollectiveSpec, chunk_sizes,
-                                verify_compiled_spec)
+                                verify_compiled_spec, wave_wire_bytes)
 from ..kernels.tree_combine.ops import (combine, q8_combine, q8_pack,
                                         q8_pack_rows, q8_unpack,
                                         q8_unpack_rows)
+from ..telemetry import metrics as _metrics
 
 
 # ---------------------------------------------------------------------------
@@ -198,6 +201,52 @@ _REDUCE_WIRE = {"full": "q8", "hybrid": "bf16", "bcast": None, "off": None}
 _FLOATS = (jnp.float32, jnp.bfloat16, jnp.float16)
 
 
+# ---------------------------------------------------------------------------
+# wave-level observability (shared by all executors)
+# ---------------------------------------------------------------------------
+
+_WAVE_SCOPES = os.environ.get("REPRO_WAVE_SCOPES", "1") != "0"
+
+
+def set_wave_scopes(enabled: bool) -> bool:
+    """Toggle the ``jax.named_scope`` wave labels (``edst/t{j}/w{w}/{op}``)
+    the executors attach so XLA device profiles attribute time to waves;
+    returns the previous setting.  Labels are pure HLO metadata -- the
+    compiled executable is identical either way -- but the toggle only
+    affects FUTURE traces, so re-jit after flipping it mid-process."""
+    global _WAVE_SCOPES
+    prev, _WAVE_SCOPES = _WAVE_SCOPES, bool(enabled)
+    return prev
+
+
+def _scope(label: str):
+    return jax.named_scope(label) if _WAVE_SCOPES else nullcontext()
+
+
+def _wave_label(w: int, wv) -> str:
+    """``edst/t{tree}/w{wave}/{op}`` for a pipelined wave: the tree when
+    the wave ships a single chunk row, ``t*`` for merged waves."""
+    tree = f"t{wv.rows[0]}" if len(wv.rows) == 1 else "t*"
+    red = bool(np.any(wv.reduce_flag))
+    bc = bool(np.any(wv.bcast_flag))
+    op = "mixed" if red and bc else ("reduce" if red else "bcast")
+    return f"edst/{tree}/w{w}/{op}"
+
+
+def _note_trace(engine: str, spec, x, codec=None, fractions=None) -> None:
+    """Executor-entry metrics hook.  Inside ``jit`` this Python runs at
+    trace time only, so it counts compiled program traces (the retrace
+    detector), not steps -- and costs nothing per step."""
+    try:
+        itemsize = jnp.dtype(x.dtype).itemsize
+        wires = wave_wire_bytes(spec, x.size * itemsize, itemsize, fractions)
+        _metrics.note_program(engine, getattr(spec, "key", None) or spec,
+                              waves=len(wires), wire_bytes=sum(wires),
+                              codec=codec)
+    except Exception:       # pragma: no cover - telemetry never breaks a step
+        pass
+
+
 def _pack_wire32(x):
     """Quantize chunk rows into an f32-lane wire: ``(..., m) float ->
     (..., ceil(m/4) + 1) f32`` holding the int8 payload bit-packed four
@@ -253,12 +302,14 @@ def _send(x, axis, perm, wire=None):
 # ---------------------------------------------------------------------------
 
 def run_tree_program(c, tree: TreeProgram, n: int, axis,
-                     quantize: bool = False, codec=None):
+                     quantize: bool = False, codec=None,
+                     scope_tree: int = 0):
     """Reduce chunk ``c`` up ``tree`` and broadcast the total back down.
 
     The per-tree building block: tree j's whole chain completes before
     tree j+1 starts in program order.  Kept for the executor A/B
     benchmark; the pipelined executor below is the default engine.
+    ``scope_tree`` only names the profiler scopes (``edst/t{j}/...``).
     """
     codec = resolve_codec(codec) if quantize else "off"
     wire = _REDUCE_WIRE[codec]
@@ -266,21 +317,27 @@ def run_tree_program(c, tree: TreeProgram, n: int, axis,
     # reduce: every non-root sends its accumulated value to its parent
     # exactly once, deepest level first, so parents accumulate complete
     # subtree sums before forwarding
-    for perm in tree.reduce_rounds:
-        c = c + _send(c, axis, perm, wire)
+    for w, perm in enumerate(tree.reduce_rounds):
+        with _scope(f"edst/t{scope_tree}/w{w}/reduce"):
+            c = c + _send(c, axis, perm, wire)
     # broadcast: the root's total overwrites down the levels.  Quantized,
     # the total is packed ONCE and the int8 wire forwards verbatim.
     if not tree.bcast_rounds:
         return c
+    base = len(tree.reduce_rounds)
     if codec != "off" and c.dtype in _FLOATS:
         packed = _pack_wire32(c)
-        for perm, table in zip(tree.bcast_rounds, tree.bcast_dst):
-            recv = jax.lax.ppermute(packed, axis, list(perm))
-            packed = jnp.where(jnp.asarray(table)[idx], recv, packed)
+        for w, (perm, table) in enumerate(zip(tree.bcast_rounds,
+                                              tree.bcast_dst)):
+            with _scope(f"edst/t{scope_tree}/w{base + w}/bcast"):
+                recv = jax.lax.ppermute(packed, axis, list(perm))
+                packed = jnp.where(jnp.asarray(table)[idx], recv, packed)
         return _unpack_wire32(packed, c.dtype, c.shape[0])
-    for perm, table in zip(tree.bcast_rounds, tree.bcast_dst):
-        recv = jax.lax.ppermute(c, axis, list(perm))
-        c = jnp.where(jnp.asarray(table)[idx], recv, c)
+    for w, (perm, table) in enumerate(zip(tree.bcast_rounds,
+                                          tree.bcast_dst)):
+        with _scope(f"edst/t{scope_tree}/w{base + w}/bcast"):
+            recv = jax.lax.ppermute(c, axis, list(perm))
+            c = jnp.where(jnp.asarray(table)[idx], recv, c)
     return c
 
 
@@ -289,6 +346,8 @@ def per_tree_allreduce(x, spec: TreeAllreduceSpec, quantize: bool = False):
     chain per tree (the pre-fusion executor)."""
     if spec.k == 0:
         return x
+    _note_trace("per_tree", spec, x,
+                codec=resolve_codec(None) if quantize else None)
     axis = _axis_arg(spec)
     shape, dtype = x.shape, x.dtype
     flat = x.reshape(-1)
@@ -297,7 +356,8 @@ def per_tree_allreduce(x, spec: TreeAllreduceSpec, quantize: bool = False):
         flat = jnp.pad(flat, (0, pad))
     chunks = flat.reshape(spec.k, -1)
 
-    outs = [run_tree_program(chunks[j], tree, spec.n, axis, quantize)
+    outs = [run_tree_program(chunks[j], tree, spec.n, axis, quantize,
+                             scope_tree=j)
             for j, tree in enumerate(spec.trees)]
 
     out = jnp.concatenate(outs) if spec.k > 1 else outs[0]
@@ -355,6 +415,8 @@ def fused_tree_allreduce(x, spec: FusedAllreduceSpec, quantize: bool = False,
         raise ValueError(f"{len(fractions)} fractions for k={spec.k} trees; "
                          "spec and striping must come from the same schedule")
     codec = resolve_codec(codec) if quantize else "off"
+    _note_trace("fused", spec, x, codec=codec if quantize else None,
+                fractions=fractions)
     r_wire = _REDUCE_WIRE[codec]
     axis = _axis_arg(spec)
     shape, dtype = x.shape, x.dtype
@@ -382,20 +444,22 @@ def fused_tree_allreduce(x, spec: FusedAllreduceSpec, quantize: bool = False,
     # single-row waves need no masking at all (ppermute zero-fills
     # devices nobody sent to); multi-row waves scatter the arrival to a
     # one-hot (k, m) contribution first.
-    for rnd in spec.reduce_rounds:
-        recv, flag, recv_rows = _fused_send(chunks, rnd, idx, axis, r_wire)
-        if k == 1:
-            chunks = _acc(chunks, recv)
-        elif len(recv_rows) == 1:
-            r0 = int(recv_rows[0])
-            chunks = chunks.at[r0].set(_acc(chunks[r0], recv))
-        else:
-            row = jnp.asarray(rnd.recv_row)[idx]
-            masked = jnp.where(flag, recv, jnp.zeros_like(recv))
-            contrib = (rows_iota == row).astype(chunks.dtype)[:, None] \
-                * masked[None, :]
-            chunks = _acc(chunks.reshape(-1),
-                          contrib.reshape(-1)).reshape(k, m)
+    for w, rnd in enumerate(spec.reduce_rounds):
+        with _scope(f"edst/t*/w{w}/reduce"):
+            recv, flag, recv_rows = _fused_send(chunks, rnd, idx, axis,
+                                                r_wire)
+            if k == 1:
+                chunks = _acc(chunks, recv)
+            elif len(recv_rows) == 1:
+                r0 = int(recv_rows[0])
+                chunks = chunks.at[r0].set(_acc(chunks[r0], recv))
+            else:
+                row = jnp.asarray(rnd.recv_row)[idx]
+                masked = jnp.where(flag, recv, jnp.zeros_like(recv))
+                contrib = (rows_iota == row).astype(chunks.dtype)[:, None] \
+                    * masked[None, :]
+                chunks = _acc(chunks.reshape(-1),
+                              contrib.reshape(-1)).reshape(k, m)
 
     # broadcast: arrivals overwrite their tree's row on destinations.
     # Quantized, the per-row totals are packed ONCE here into the
@@ -405,17 +469,20 @@ def fused_tree_allreduce(x, spec: FusedAllreduceSpec, quantize: bool = False,
     q_bcast = codec != "off" and bool(spec.bcast_rounds) and dtype in _FLOATS
     if q_bcast:
         chunks = _pack_wire32(chunks)
-    for rnd in spec.bcast_rounds:
-        recv, flag, recv_rows = _fused_send(chunks, rnd, idx, axis)
-        if k == 1:
-            chunks = jnp.where(flag, recv, chunks)
-        elif len(recv_rows) == 1:
-            r0 = int(recv_rows[0])
-            chunks = chunks.at[r0].set(jnp.where(flag, recv, chunks[r0]))
-        else:
-            row = jnp.asarray(rnd.recv_row)[idx]
-            sel = ((rows_iota == row) & flag)[:, None]
-            chunks = jnp.where(sel, recv[None, :], chunks)
+    base = len(spec.reduce_rounds)
+    for w, rnd in enumerate(spec.bcast_rounds):
+        with _scope(f"edst/t*/w{base + w}/bcast"):
+            recv, flag, recv_rows = _fused_send(chunks, rnd, idx, axis)
+            if k == 1:
+                chunks = jnp.where(flag, recv, chunks)
+            elif len(recv_rows) == 1:
+                r0 = int(recv_rows[0])
+                chunks = chunks.at[r0].set(jnp.where(flag, recv,
+                                                     chunks[r0]))
+            else:
+                row = jnp.asarray(rnd.recv_row)[idx]
+                sel = ((rows_iota == row) & flag)[:, None]
+                chunks = jnp.where(sel, recv[None, :], chunks)
     if q_bcast:
         chunks = _unpack_wire32(chunks, dtype, m)
 
@@ -546,16 +613,19 @@ def pipelined_tree_allreduce(x, spec: PipelinedAllreduceSpec,
     segments = max(1, min(int(segments), mrow))
     msub = -(-mrow // segments)
     mrow = msub * segments
+    _note_trace("pipelined", spec, x, codec=codec if quantize else None,
+                fractions=fractions)
     rows = _rows_of(flat, k, sizes, mrow)
 
     if segments == 1:
         if quantize:
             rows = _q8_unrolled(rows, spec, idx, axis, codec)
         else:
-            for wv in spec.waves:
-                recv = jax.lax.ppermute(_select_payload(rows, wv, idx),
-                                        axis, list(wv.perm))
-                rows = _apply_wave(rows, wv, recv, idx)
+            for w, wv in enumerate(spec.waves):
+                with _scope(_wave_label(w, wv)):
+                    recv = jax.lax.ppermute(_select_payload(rows, wv, idx),
+                                            axis, list(wv.perm))
+                    rows = _apply_wave(rows, wv, recv, idx)
     else:
         rows = _scanned(rows, spec, idx, axis, segments, msub,
                         codec if quantize else None, dtype)
@@ -571,35 +641,40 @@ def _q8_unrolled(rows, spec, idx, axis, codec):
     trees."""
     dtype = rows[0].dtype
     r_wire = _REDUCE_WIRE[codec]
-    for wv in spec.q8_waves[:spec.q8_boundary]:
-        payload = _select_payload(rows, wv, idx)
-        if r_wire == "q8" and payload.dtype in _FLOATS:
-            wire = jax.lax.ppermute(q8_pack(payload), axis, list(wv.perm))
-            if wv.sole_add >= 0:
-                rows[wv.sole_add] = q8_combine(wire, rows[wv.sole_add])
-                continue
-            recv = q8_unpack(wire, dtype)
-        else:
-            recv = _send(payload, axis, wv.perm, r_wire)
-        rows = _apply_wave(rows, wv, recv, idx)
-    if spec.q8_boundary == len(spec.q8_waves) or dtype not in _FLOATS:
-        for wv in spec.q8_waves[spec.q8_boundary:]:
-            recv = jax.lax.ppermute(_select_payload(rows, wv, idx),
-                                    axis, list(wv.perm))
+    bnd = spec.q8_boundary
+    for w, wv in enumerate(spec.q8_waves[:bnd]):
+        with _scope(_wave_label(w, wv)):
+            payload = _select_payload(rows, wv, idx)
+            if r_wire == "q8" and payload.dtype in _FLOATS:
+                wire = jax.lax.ppermute(q8_pack(payload), axis,
+                                        list(wv.perm))
+                if wv.sole_add >= 0:
+                    rows[wv.sole_add] = q8_combine(wire, rows[wv.sole_add])
+                    continue
+                recv = q8_unpack(wire, dtype)
+            else:
+                recv = _send(payload, axis, wv.perm, r_wire)
             rows = _apply_wave(rows, wv, recv, idx)
+    if bnd == len(spec.q8_waves) or dtype not in _FLOATS:
+        for w, wv in enumerate(spec.q8_waves[bnd:]):
+            with _scope(_wave_label(bnd + w, wv)):
+                recv = jax.lax.ppermute(_select_payload(rows, wv, idx),
+                                        axis, list(wv.perm))
+                rows = _apply_wave(rows, wv, recv, idx)
         return rows
     mrow = rows[0].shape[0]
     if len(rows) == 1:
         packed = [_pack_wire32(rows[0])]
     else:
         packed = list(_pack_wire32(jnp.stack(rows)))
-    for wv in spec.q8_waves[spec.q8_boundary:]:
-        recv = jax.lax.ppermute(_select_payload(packed, wv, idx),
-                                axis, list(wv.perm))
-        for j in range(len(packed)):
-            if wv.bcast_flag[j].any():
-                packed[j] = jnp.where(_gather(wv.bcast_flag[j], idx),
-                                      recv, packed[j])
+    for w, wv in enumerate(spec.q8_waves[bnd:]):
+        with _scope(_wave_label(bnd + w, wv)):
+            recv = jax.lax.ppermute(_select_payload(packed, wv, idx),
+                                    axis, list(wv.perm))
+            for j in range(len(packed)):
+                if wv.bcast_flag[j].any():
+                    packed[j] = jnp.where(_gather(wv.bcast_flag[j], idx),
+                                          recv, packed[j])
     if len(packed) == 1:
         return [_unpack_wire32(packed[0], dtype, mrow)]
     return list(_unpack_wire32(jnp.stack(packed), dtype, mrow))
@@ -636,22 +711,24 @@ def _scanned(rows, spec, idx, axis, segments, msub, codec, dtype):
     def body(t, carry):
         st, pst = carry
         for w, wv in enumerate(waves):
-            seg = t - stage[w]
-            valid = (seg >= 0) & (seg < segments)
-            segc = jnp.clip(seg, 0, segments - 1)
-            bcast_wave = codec is not None and w >= boundary
-            src = pst if bcast_wave else st
-            cur = [seg_slice(src, j, segc) for j in range(k)]
-            payload = _select_payload(cur, wv, idx)
-            recv = _send(payload, axis, wv.perm,
-                         None if bcast_wave else _REDUCE_WIRE.get(codec))
-            new = _apply_wave(list(cur), wv, recv, idx, valid=valid)
-            for j in range(k):
-                if new[j] is not cur[j]:
-                    if bcast_wave:
-                        pst = seg_update(pst, j, segc, new[j])
-                    else:
-                        st = seg_update(st, j, segc, new[j])
+            with _scope(_wave_label(w, wv)):
+                seg = t - stage[w]
+                valid = (seg >= 0) & (seg < segments)
+                segc = jnp.clip(seg, 0, segments - 1)
+                bcast_wave = codec is not None and w >= boundary
+                src = pst if bcast_wave else st
+                cur = [seg_slice(src, j, segc) for j in range(k)]
+                payload = _select_payload(cur, wv, idx)
+                recv = _send(payload, axis, wv.perm,
+                             None if bcast_wave
+                             else _REDUCE_WIRE.get(codec))
+                new = _apply_wave(list(cur), wv, recv, idx, valid=valid)
+                for j in range(k):
+                    if new[j] is not cur[j]:
+                        if bcast_wave:
+                            pst = seg_update(pst, j, segc, new[j])
+                        else:
+                            st = seg_update(st, j, segc, new[j])
         if codec is not None:
             # pack pseudo-stage: segment t - boundary crosses into bcast
             seg = t - boundary

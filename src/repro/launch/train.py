@@ -82,6 +82,23 @@ def main(argv=None):
                          "background rebuild + hot-swap on bursts; node "
                          "loss checkpoints and exits (rescale by "
                          "relaunching on the surviving mesh)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a predicted Perfetto trace (Chrome trace "
+                         "event JSON) of the compiled sync program at this "
+                         "run's gradient payload size before training "
+                         "starts (--sync edst; with --recover the whole "
+                         "fault-runtime entry table is rendered)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a JAX profiler trace of the training "
+                         "loop into DIR; the executors' edst/t*/w*/op "
+                         "named scopes label every sync wave in the "
+                         "timeline")
+    ap.add_argument("--metrics-out", default=None,
+                    help="dump the telemetry metrics registry (JSON) at "
+                         "the end of the run")
+    ap.add_argument("--journal-out", default=None,
+                    help="append the recovery journal to this JSONL file "
+                         "as transitions happen (--recover)")
     args = ap.parse_args(argv)
     if args.zero1:
         args.sync, args.edst_engine = "edst", "striped"
@@ -124,7 +141,7 @@ def main(argv=None):
             runtime = fault_runtime_for_mesh(dims, names,
                                              engine=args.edst_engine)
             monitor = HealthMonitor(mesh, runtime)
-            ctrl = RecoveryController(runtime)
+            ctrl = RecoveryController(runtime, journal_path=args.journal_out)
 
         step_fn = make_train_step(api, opt, mesh, mode=args.sync,
                                   quantize=args.quantize_grads,
@@ -135,6 +152,25 @@ def main(argv=None):
         # rollback on a suspect step needs the pre-step buffers alive
         donate = () if ctrl is not None else (0, 1)
         jstep = jax.jit(step_fn, donate_argnums=donate)
+
+        if args.trace_out:
+            if args.sync != "edst" or dp_size(mesh) < 2:
+                print("[train] --trace-out skipped: no compiled EDST sync "
+                      "program on this mesh/sync mode")
+            else:
+                from repro.telemetry import trace as ttrace
+                psize = sum(int(np.prod(p.shape, dtype=np.int64))
+                            for p in jax.tree.leaves(params))
+                if runtime is not None:
+                    tr = ttrace.trace_runtime(runtime, nbytes=4 * psize)
+                else:
+                    spec = (zspec if zspec is not None else
+                            edst_spec_for_mesh(dims, names,
+                                               engine=args.edst_engine))
+                    tr = ttrace.trace_spec(spec, nbytes=4 * psize,
+                                           label=f"edst/{args.edst_engine}")
+                ttrace.write_trace(args.trace_out, tr)
+                print(f"[train] predicted sync trace -> {args.trace_out}")
 
         start = 0
         if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
@@ -151,6 +187,11 @@ def main(argv=None):
 
         stream = SyntheticLMStream(cfg.vocab, args.seq, args.batch,
                                    seed=args.seed)
+        from repro.telemetry import metrics as tmetrics
+        steps_total = tmetrics.counter(
+            "edst_train_steps_total", "optimizer steps committed, by sync mode")
+        if args.profile_dir:
+            jax.profiler.start_trace(args.profile_dir)
         t0 = time.time()
         losses = []
         step = start
@@ -200,6 +241,7 @@ def main(argv=None):
                 params, opt_state, metrics = jstep(params, opt_state, batch)
                 loss = float(metrics["loss"])
             losses.append(loss)
+            steps_total.inc(mode=args.sync)
             if step % args.log_every == 0 or step == args.steps - 1:
                 dt = time.time() - t0
                 print(f"[train] step {step:5d} loss {losses[-1]:.4f} "
@@ -208,6 +250,12 @@ def main(argv=None):
             if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
                 _save(args, step + 1, params, opt_state, zmap)
             step += 1
+        if args.profile_dir:
+            jax.profiler.stop_trace()
+            print(f"[train] profiler trace -> {args.profile_dir}")
+        if args.metrics_out:
+            tmetrics.REGISTRY.dump_json(args.metrics_out)
+            print(f"[train] metrics -> {args.metrics_out}")
         if ctrl is not None and ctrl.journal:
             print(f"[train] recovery journal ({len(ctrl.journal)} entries):")
             for row in ctrl.journal_rows():

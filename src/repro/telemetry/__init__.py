@@ -1,0 +1,31 @@
+"""Wave-level observability for the EDST stack.
+
+Three pillars (see ``src/repro/dist/README.md`` -> "Observability"):
+
+  * :mod:`repro.telemetry.metrics` -- process-wide counters / gauges /
+    histograms with JSON and Prometheus-text export, fed by the
+    executors, the health monitor, the recovery controller, the chaos
+    injector and the train loop;
+  * :mod:`repro.telemetry.trace`   -- Chrome-trace-event (Perfetto)
+    export of any compiled wave program: spans per message, lanes per
+    device or tree, flow events along the verifier's happens-before DAG,
+    predicted (CostModel) or measured timings;
+  * :mod:`repro.telemetry.timing`  -- the wave-by-wave instrumented
+    executor: per-wave measured durations, residuals against the
+    CostModel's predictions, and calibration fitting.
+
+``metrics`` is pure stdlib and imported eagerly; ``trace`` needs NumPy
+only; ``timing`` imports JAX and is loaded lazily.
+"""
+from __future__ import annotations
+
+from . import metrics  # noqa: F401  (stdlib-only, always safe)
+
+__all__ = ("metrics", "trace", "timing")
+
+
+def __getattr__(name):
+    if name in ("trace", "timing"):
+        import importlib
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
